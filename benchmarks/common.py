@@ -1,0 +1,72 @@
+"""Shared benchmark utilities: the paper's experimental protocol."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import simulate
+from repro.core.simulate import rounds_to_target
+
+
+@dataclass
+class AlgoResult:
+    algo: str
+    rounds: Optional[int]     # comm rounds to target (None = not reached)
+    final_gap: float
+    iters: int
+    wall_s: float
+    history: list
+
+
+def run_algo(algo: str, loss_fn, p0, data, eval_fn, fstar: float, *,
+             target_gap: float, eta1: float, T1: int, k1: float,
+             n_stages: int, iid: bool, batch: int, max_rounds: int,
+             lr_alpha: float = 0.0, gamma_inv: float = 0.0,
+             momentum: float = 0.0, batch_growth: float = 1.05,
+             max_batch: int = 256, seed: int = 0,
+             eval_every: int = 8) -> AlgoResult:
+    cfg = TrainConfig(algo=algo, eta1=eta1, T1=T1, k1=k1, n_stages=n_stages,
+                      iid=iid, batch_per_client=batch, gamma_inv=gamma_inv,
+                      momentum=momentum, batch_growth=batch_growth,
+                      max_batch=max_batch, seed=seed)
+    t0 = time.time()
+    hist = simulate.run(loss_fn, p0, data, cfg, eval_fn,
+                        eval_every=eval_every, max_rounds=max_rounds,
+                        target=fstar + target_gap, lr_alpha=lr_alpha)
+    wall = time.time() - t0
+    return AlgoResult(algo, rounds_to_target(hist, fstar + target_gap),
+                      hist[-1].value - fstar, hist[-1].iteration, wall,
+                      [(h.round, h.value) for h in hist])
+
+
+def find_fstar(eval_fn, p0, lr: float = 1.0, iters: int = 4000) -> float:
+    """Near-exact optimum by full-batch GD (convex problems)."""
+    p = p0
+    step = jax.jit(lambda p: jax.tree.map(
+        lambda a, g: a - lr * g, p, jax.grad(eval_fn)(p)))
+    for _ in range(iters):
+        p = step(p)
+    return float(eval_fn(p))
+
+
+def print_table(title: str, rows: List[Dict], cols: List[str]):
+    print(f"\n## {title}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+
+
+def save_artifact(name: str, payload, directory: str = "artifacts/convergence"):
+    import json
+    import os
+
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path

@@ -1,0 +1,66 @@
+"""Micro-benchmarks: wall-time of the framework's primitive operations on
+this host (CPU) — smoke-scale numbers proving the pipelines execute, in the
+required ``name,us_per_call,derived`` format."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import local_sgd as LS
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as TF
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile + warm
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6  # us
+
+
+def run(quick: bool = True):
+    rows = []
+    mesh = make_host_mesh(1, 1)
+    cfg = get_arch("qwen3-14b", smoke=True)
+    C, B, S = 2, 2, 128
+    state = LS.init_state(jax.random.key(0), cfg, C)
+    batch = {
+        "tokens": jnp.zeros((C, B, S), jnp.int32),
+        "labels": jnp.zeros((C, B, S), jnp.int32),
+    }
+    local_step, sync_step, _ = LS.build_train_steps(cfg, mesh)
+    jl, js = jax.jit(local_step), jax.jit(sync_step)
+    us = _time(lambda: jl(state, batch, 0.01)[0]["params"])
+    tokens = C * B * S
+    rows.append(("train_local_step_smoke", us, f"{tokens / us:.2f}Mtok/s" if False else f"{tokens/(us/1e6):.0f}tok/s"))
+    us = _time(lambda: js(state)["params"])
+    rows.append(("sync_round_smoke", us, "param_avg"))
+
+    params = TF.init_params(jax.random.key(0), cfg)
+    cache = TF.init_cache(cfg, B, 256)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    jd = jax.jit(lambda p, t, c: TF.decode_step(p, cfg, t, c))
+    us = _time(lambda: jd(params, tok, cache)[0])
+    rows.append(("decode_step_smoke", us, f"{B/(us/1e6):.0f}tok/s"))
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = jnp.ones((1, 256, 4, 64), jnp.float32)
+    k = jnp.ones((1, 256, 2, 64), jnp.float32)
+    jf = jax.jit(lambda q, k: flash_attention(q, k, k, impl="xla"))
+    us = _time(lambda: jf(q, k))
+    rows.append(("flash_attention_xla_256", us, "oracle"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > artifacts/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import analyse_cell
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(art_dir="artifacts/dryrun", pattern="*.json"):
+    lines = ["| arch | shape | mesh | program | peak B/dev | HLO flops/dev† | "
+             "coll link-bytes (loop-wtd) | client-axis bytes | model-axis bytes |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(art_dir, pattern))):
+        rec = json.load(open(path))
+        mesh = "x".join(str(v) for v in rec["mesh"].values())
+        tag = " (hier)" if rec.get("hierarchical") else ""
+        for p in rec["programs"]:
+            ba = p["collectives"]["by_axes"]
+            client_b = sum(v for k, v in ba.items() if "data" in k or "pod" in k)
+            model_b = sum(v for k, v in ba.items() if "model" in k)
+            lines.append(
+                f"| {rec['arch']}{tag} | {rec['shape']} | {mesh} | {p['program']} "
+                f"| {_fmt_bytes(p['memory'].get('peak_bytes'))} "
+                f"| {p['cost'].get('flops', 0):.2e} "
+                f"| {_fmt_bytes(p['collectives']['total_link_bytes'])} "
+                f"| {_fmt_bytes(client_b)} | {_fmt_bytes(model_b)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(art_dir="artifacts/dryrun", pattern="*singlepod.json"):
+    lines = ["| arch | shape | program | compute s | memory s | collective s | "
+             "dominant | MODEL_FLOPS | useful ratio | fits 16G | next lever |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(art_dir, pattern))):
+        row = analyse_cell(path)
+        if not row:
+            continue
+        lever = _lever(row)
+        lines.append(
+            f"| {row['arch']} | {row['shape']} | {row['program']} "
+            f"| {row['t_compute_s']} | {row['t_memory_s']} "
+            f"| {row['t_collective_s']} | **{row['dominant']}** "
+            f"| {row['model_flops']} | {row['useful_ratio']} "
+            f"| {row['fits_16g']} | {lever} |")
+    return "\n".join(lines)
+
+
+def _lever(row) -> str:
+    dom = row["dominant"]
+    if dom == "memory":
+        if "decode" in row["shape"] or "500k" in row["shape"]:
+            return "int8/latent KV cache; batch KV reads"
+        return "smaller remat live set; fused update"
+    if dom == "compute":
+        if float(row["useful_ratio"]) < 0.6:
+            return "cut remat recompute; tighter attention banding"
+        return "near roofline — overlap collectives"
+    if row["program"] in ("prefill_step", "serve_step"):
+        return "grouped/shard_map MoE dispatch; narrower TP"
+    return "raise k_s (paper); narrower TP; overlap sync"
+
+
+def main():
+    print("### Dry-run matrix (all programs, all meshes)\n")
+    print(dryrun_table())
+    print("\n\n### Roofline — single-pod (16×16)\n")
+    print(roofline_table(pattern="*singlepod.json"))
+    print("\n\n### Roofline — multi-pod (2×16×16)\n")
+    print(roofline_table(pattern="*multipod.json"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh) cell:
+    compute term    = FLOPs / (chips × peak)        [analytical model —
+                      HLO undercounts scan bodies; reported as cross-check]
+    memory term     = HBM bytes / (chips × HBM bw)
+    collective term = link bytes / link bw           [loop-weighted HLO parse]
+plus the dominant term, MODEL_FLOPS = 6·N_active·D, the useful-compute ratio,
+and — for train cells — the STL-SGD amortized communication at stage s
+(sync bytes / k_s) vs the SyncSGD per-step gradient all-reduce.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from typing import Optional
+
+from repro.configs import SHAPES, arch_for_shape
+from repro.launch.flops import shape_flops
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DCN_BW = 6.25e9  # inter-pod (data-center network) B/s per host link, v5e-ish
+
+
+def analyse_cell(path: str) -> Optional[dict]:
+    with open(path) as f:
+        rec = json.load(f)
+    mesh = rec["mesh"]
+    chips = 1
+    for v in mesh.values():
+        chips *= v
+    shape = SHAPES[rec["shape"]]
+    cfg = arch_for_shape(rec["arch"], rec["shape"])
+    fr = shape_flops(cfg, shape)
+
+    programs = {p["program"]: p for p in rec["programs"]}
+    main = programs.get("local_step") or programs.get("serve_step") \
+        or programs.get("prefill_step")
+    if main is None:
+        return None
+
+    t_compute = fr.step_flops / (chips * PEAK_FLOPS_BF16)
+    # memory: use HLO bytes when plausible (per device) else analytical
+    hlo_bytes = main["cost"].get("bytes_accessed") or 0.0
+    t_memory_hlo = hlo_bytes / HBM_BW  # per device already
+    t_memory_model = fr.hbm_bytes / (chips * HBM_BW)
+    t_memory = max(t_memory_hlo, t_memory_model)
+
+    coll = main["collectives"]
+    by_axes = coll.get("by_axes", {})
+    # HLO shapes are per-device after SPMD partitioning, so parsed collective
+    # bytes are already per-device link traffic — no division by chip count.
+    t_coll = 0.0
+    for axes, b in by_axes.items():
+        bw = DCN_BW if "pod" in axes else ICI_BW
+        t_coll += b / bw
+
+    hlo_flops = main["cost"].get("flops") or 0.0
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "x".join(str(v) for v in mesh.values()),
+        "variant": rec.get("arch_variant", ""),
+        "program": main["program"],
+        "t_compute_s": f"{t_compute:.3e}",
+        "t_memory_s": f"{t_memory:.3e}",
+        "t_collective_s": f"{t_coll:.3e}",
+        "dominant": dominant,
+        "model_flops": f"{fr.model_flops:.3e}",
+        "step_flops_analytical": f"{fr.step_flops:.3e}",
+        "useful_ratio": f"{fr.model_flops / fr.step_flops:.2f}",
+        "hlo_flops_per_dev(loop-body-once)": f"{hlo_flops:.3e}",
+        "peak_bytes_dev": main["memory"].get("peak_bytes"),
+        "fits_16g": "Y" if (main["memory"].get("peak_bytes") or 0) < 16e9 else "N",
+    }
+
+    # STL-SGD vs SyncSGD communication story (train cells)
+    if "sync_step" in programs and "syncsgd_step" in programs:
+        sync_b = programs["sync_step"]["collectives"]["total_link_bytes"]
+        ssgd = programs["syncsgd_step"]["collectives"]["by_axes"]
+        ssgd_client = sum(b for a, b in ssgd.items()
+                          if "data" in a or "pod" in a)
+        local_client = sum(b for a, b in by_axes.items()
+                           if ("data" in a or "pod" in a))
+        out["syncsgd_client_bytes_per_step"] = f"{ssgd_client:.3e}"
+        out["stl_sync_bytes_per_round"] = f"{sync_b:.3e}"
+        for k in (1, 8, 64):
+            amort = (local_client + sync_b / k) / ICI_BW
+            out[f"stl_comm_s_k{k}"] = f"{amort:.3e}"
+        out["syncsgd_comm_s"] = f"{ssgd_client / ICI_BW:.3e}"
+    return out
+
+
+def run(art_dir: str = "artifacts/dryrun", pattern: str = "*singlepod.json"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, pattern))):
+        try:
+            row = analyse_cell(path)
+            if row:
+                rows.append(row)
+        except Exception as e:
+            rows.append({"arch": os.path.basename(path), "dominant": f"ERR {e}"})
+    cols = ["arch", "shape", "mesh", "program", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "useful_ratio", "fits_16g"]
+    from benchmarks.common import print_table
+
+    print_table("Roofline (per arch × shape × mesh)", rows, cols)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(pattern=sys.argv[1] if len(sys.argv) > 1 else "*singlepod.json")

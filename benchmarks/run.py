@@ -1,0 +1,49 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV for the micro-benches, then the paper-table reproductions and the
+# roofline analysis derived from the dry-run artifacts.
+#
+#   PYTHONPATH=src python -m benchmarks.run [--full] [--skip-convergence]
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale budgets (hours); default quick mode")
+    ap.add_argument("--skip-convergence", action="store_true",
+                    help="only micro-benches + complexity + roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    t0 = time.time()
+
+    print("name,us_per_call,derived")
+    from benchmarks import microbench
+
+    microbench.run(quick=quick)
+
+    from benchmarks import table3_complexity
+
+    table3_complexity.run(quick=quick)
+
+    from benchmarks import roofline
+
+    try:
+        roofline.run()
+    except Exception as e:  # artifacts may not exist yet
+        print(f"[roofline] skipped: {e}", file=sys.stderr)
+
+    if not args.skip_convergence:
+        from benchmarks import table1_convex, table2_nonconvex
+
+        table1_convex.run(quick=quick)
+        table2_nonconvex.run(quick=quick)
+
+    print(f"\n[benchmarks] done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Federated Non-IID training — the paper's §5.1 Non-IID protocol end-to-end.
+
+Builds the label-sorted Non-IID partition (s=50% as in the paper), measures
+the client gradient diversity ζ, derives the admissible k₁ from Theorem 1's
+formula, and runs STL-SGD^sc with the √2 Non-IID stage growth vs Local SGD.
+
+    PYTHONPATH=src python examples/federated_noniid.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import schedules, simulate
+from repro.data import make_binary_classification
+from repro.data.partition import gradient_diversity, partition_paper
+from repro.models import logreg
+
+N = 8
+x, y = make_binary_classification(n=8192, d=64, seed=0)
+lam = 1e-3
+data_np = partition_paper(x, y, N, iid_percent=50.0, seed=1)
+data = {k: jnp.asarray(v) for k, v in data_np.items()}
+xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+loss_fn = lambda p, b: logreg.loss_fn(p, b, lam)
+eval_fn = jax.jit(lambda p: logreg.full_objective(p, xj, yj, lam))
+p0 = logreg.init_params(None, 64)
+
+# --- measure the heterogeneity the theory depends on ----------------------
+full_grad = lambda p, d: jax.grad(lambda q: loss_fn(q, d))(p)
+zeta = float(gradient_diversity(data, full_grad, p0))
+print(f"gradient diversity ζ at x0: {zeta:.4f}")
+
+# Theorem 1's admissible k1 (L≈0.25 for logistic features scaled ~1, + λ)
+eta1, L = 0.5, 0.5
+k1_hom = schedules.theory_k1(eta1, L, N, sigma=1.0, zeta=0.0, iid=False)
+k1_non = schedules.theory_k1(eta1, L, N, sigma=1.0, zeta=zeta, iid=False)
+print(f"theory k1 (Non-IID formula): ζ=0 → {k1_hom:.2f}, measured ζ → "
+      f"{k1_non:.2f} (heterogeneity shrinks the admissible period)")
+
+# --- optimum ---------------------------------------------------------------
+p = p0
+gd = jax.jit(lambda p: jax.tree.map(lambda a, g: a - 2.0 * g, p,
+                                    jax.grad(eval_fn)(p)))
+for _ in range(4000):
+    p = gd(p)
+fstar = float(eval_fn(p))
+
+TARGET = 1e-4
+for algo, kw in [
+    ("sync", dict(k1=1.0, n_stages=24)),
+    ("local", dict(k1=8.0, n_stages=24)),
+    ("stl_sc", dict(k1=8.0, n_stages=14)),   # Non-IID: k_{s+1} = √2·k_s
+]:
+    cfg = TrainConfig(algo=algo, eta1=eta1, T1=512, iid=False,
+                      batch_per_client=32, seed=0, **kw)
+    hist = simulate.run(loss_fn, p0, data, cfg, eval_fn, eval_every=8,
+                        max_rounds=12000, target=fstar + TARGET,
+                        lr_alpha=1e-3 if algo in ("sync", "local") else 0.0)
+    r = simulate.rounds_to_target(hist, fstar + TARGET)
+    print(f"{algo:8s} Non-IID rounds to gap<{TARGET}: {r} "
+          f"(final gap {hist[-1].value - fstar:.2e})")

@@ -1,0 +1,71 @@
+"""Flat-npz pytree checkpointing with step/stage metadata.
+
+Layout: <dir>/step_<n>.npz holding flattened leaves keyed by path string plus
+a json metadata entry (stage index, schedule state, rng). Restores into the
+same tree structure (template-driven), so dtype/shape drift is caught loudly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":  # ml_dtypes (bf16/f8): widen losslessly
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree, meta: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:010d}.npz")
+    flat = _flatten(tree)
+    flat["__meta__"] = np.frombuffer(
+        json.dumps(meta or {}).encode(), dtype=np.uint8).copy()
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)  # atomic publish
+    return path
+
+
+def load_checkpoint(directory: str, template, step: Optional[int] = None
+                    ) -> Tuple[Any, dict]:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}.npz")
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(bytes(z["__meta__"].tobytes()).decode())
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf_t in flat:
+            key = jax.tree_util.keystr(p)
+            arr = z[key]
+            if hasattr(leaf_t, "shape") and tuple(arr.shape) != tuple(leaf_t.shape):
+                raise ValueError(f"{key}: checkpoint shape {arr.shape} != {leaf_t.shape}")
+            if hasattr(leaf_t, "dtype") and arr.dtype != leaf_t.dtype:
+                arr = arr.astype(leaf_t.dtype)  # cast back (bf16 widened on save)
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves)
+    return tree, meta
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,5 @@
+# The paper's primary contribution: Local SGD with stagewise communication
+# period (STL-SGD), as schedules + distributed step builders + drivers.
+from repro.core import schedules, simulate, local_sgd, stl_sgd, baselines, prox, serving
+
+__all__ = ["schedules", "simulate", "local_sgd", "stl_sgd", "baselines", "prox", "serving"]

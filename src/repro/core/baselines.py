@@ -1,0 +1,42 @@
+"""Baseline drivers the paper compares against (§5): SyncSGD, LB-SGD, CR-PSGD.
+
+All three are degenerate schedules of the same (train_step_local, sync_step)
+pair — k = 1 with different batch policies — so the baseline implementations
+share every line of distributed machinery with STL-SGD. CR-PSGD's growing
+batch is realised by the data pipeline (``crpsgd_batch_sizes``), keeping the
+step function shape-stable per size.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List
+
+from repro.configs.base import TrainConfig
+from repro.core.stl_sgd import StagewiseDriver
+
+
+def sync_sgd_driver(tcfg: TrainConfig, train_step, sync_step) -> StagewiseDriver:
+    return StagewiseDriver(tcfg.replace_algo("sync") if hasattr(tcfg, "replace_algo")
+                           else _with_algo(tcfg, "sync"), train_step, sync_step)
+
+
+def lb_sgd_driver(tcfg: TrainConfig, train_step, sync_step) -> StagewiseDriver:
+    return StagewiseDriver(_with_algo(tcfg, "lb"), train_step, sync_step)
+
+
+def crpsgd_batch_sizes(b0: int, growth: float, n_steps: int, max_batch: int,
+                       quantum: int = 8) -> List[int]:
+    """CR-PSGD batch schedule, quantised to multiples of ``quantum`` so the
+    number of distinct compiled step shapes stays small."""
+    sizes = []
+    b = float(b0)
+    for _ in range(n_steps):
+        q = min(max_batch, int(b / quantum + 0.5) * quantum or quantum)
+        sizes.append(max(quantum, q))
+        b = min(float(max_batch), b * growth)
+    return sizes
+
+
+def _with_algo(tcfg: TrainConfig, algo: str) -> TrainConfig:
+    import dataclasses
+
+    return dataclasses.replace(tcfg, algo=algo)

@@ -1,0 +1,191 @@
+"""Distributed Local-SGD step builders (pjit + client replicas on a mesh axis).
+
+The paper's clients map to a mesh axis (DESIGN.md §2/§4):
+
+  * ``train_step_local`` — every client takes one SGD step on its own replica.
+    Parameters carry a leading client axis sharded on ``client_axis``; the
+    step is ``jax.vmap(per_client_step, spmd_axis_name=client_axis)`` so XLA
+    emits **zero collectives on the client axis** (tensor-parallel collectives
+    on ``model`` remain). Executed k_s times per round.
+
+  * ``sync_step`` — Algorithm 1 line 5: the parameter-averaging round. One
+    all-reduce of params (+ optimizer moments) over the client axis.
+
+  * hierarchical mode (``client_axis="pod"``): grads are additionally
+    all-reduced over ``data`` *inside* the local step (SyncSGD within a pod
+    over fast ICI), while the stagewise schedule governs only the expensive
+    inter-pod parameter average. This is the beyond-paper deployment mode.
+
+All builders return *lowerable* jitted callables — the multi-pod dry-run
+compiles exactly these.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as TF
+from repro.optim import make_optimizer
+from repro.sharding import param_specs
+from repro.sharding.rules import cache_specs
+from repro.utils.tree import tree_broadcast_leading, tree_mean_leading
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ArchConfig, batch):
+    """Next-token CE. batch: {"tokens","labels": (B,S)} [+ "frontend"]."""
+    logits, aux = TF.forward(params, cfg, batch["tokens"], batch.get("frontend"))
+    S = batch["labels"].shape[1]
+    logits = logits[:, -S:, :]  # drop frontend positions
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + aux
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ArchConfig, client_axis: Optional[str], extra_data_axis: bool):
+    """PartitionSpec tree for the training batch.
+
+    Leading batch dim carries the client axis and (hierarchical mode) the
+    intra-pod data axis.
+    """
+    axes = []
+    if client_axis:
+        axes.append(client_axis)
+    if extra_data_axis:
+        axes.append("data")
+    lead = tuple(axes) if axes else None
+    spec = {"tokens": P(lead, None), "labels": P(lead, None)}
+    if cfg.frontend:
+        spec["frontend"] = P(lead, None, None)
+    return spec
+
+
+def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
+                      optimizer: str = "sgd", momentum: float = 0.0,
+                      weight_decay: float = 0.0,
+                      loss_fn: Optional[Callable] = None,
+                      microbatch: int = 1,
+                      sync_grads: bool = False,
+                      donate: bool = True):
+    """Returns (train_step_local, sync_step, specs) for the given mesh.
+
+    train_step_local(state, batch, eta) -> (state, metrics)
+        state = {"params": (C, ...), "opt": (C, ...), "step": scalar}
+    sync_step(state) -> state   (client-axis parameter average)
+
+    ``microbatch`` > 1 splits each client's batch into that many
+    gradient-accumulation slices (scan), dividing activation memory.
+    In hierarchical mode (client_axis="pod") the per-client gradient is
+    additionally pmean'd over "data" inside the local step.
+    """
+    loss_fn = loss_fn or lm_loss
+    hierarchical = client_axis == "pod"
+    opt_init, opt_update = make_optimizer(optimizer, momentum, weight_decay)
+
+    def per_client_grad(params, batch):
+        if microbatch == 1:
+            return jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+
+        def slice_mb(x, i):
+            mb = x.shape[0] // microbatch
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            loss_acc, g_acc = carry
+            mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+            loss, g = jax.value_and_grad(lambda p: loss_fn(p, cfg, mb))(params)
+            return (loss_acc + loss, jax.tree.map(jnp.add, g_acc, g)), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero),
+            jnp.arange(microbatch))
+        inv = 1.0 / microbatch
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def per_client_step(params, opt_state, batch, eta):
+        if hierarchical:
+            # batch: (data_shards, per_shard, S). SyncSGD within the pod —
+            # per-shard grads (vmapped over `data`) averaged over the leading
+            # axis = the intra-pod gradient all-reduce over fast ICI.
+            losses, grads = jax.vmap(
+                lambda b: per_client_grad(params, b),
+                spmd_axis_name="data")(batch)
+            grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = per_client_grad(params, batch)
+        if sync_grads:
+            # SyncSGD baseline: all-reduce grads over the client axis.
+            grads = jax.lax.pmean(grads, axis_name="clients")
+            loss = jax.lax.pmean(loss, axis_name="clients")
+        params, opt_state = opt_update(params, grads, opt_state, eta)
+        return params, opt_state, loss
+
+    vstep = jax.vmap(per_client_step, in_axes=(0, 0, 0, None),
+                     out_axes=(0, 0, 0), spmd_axis_name=client_axis,
+                     axis_name="clients")
+
+    def train_step_local(state, batch, eta):
+        params, opt, loss = vstep(state["params"], state["opt"], batch, eta)
+        return {"params": params, "opt": opt, "step": state["step"] + 1}, {
+            "loss": jnp.mean(loss)}
+
+    def sync_step(state):
+        n = jax.tree.leaves(state["params"])[0].shape[0]
+        params = tree_broadcast_leading(tree_mean_leading(state["params"]), n)
+        opt = tree_broadcast_leading(tree_mean_leading(state["opt"]), n)
+        return {"params": params, "opt": opt, "step": state["step"]}
+
+    return train_step_local, sync_step, per_client_step
+
+
+def state_shardings(cfg: ArchConfig, mesh, params_shape, opt_shape,
+                    client_axis: str = "data"):
+    """NamedShardings for the training state pytree.
+
+    Hierarchical mode (client_axis == 'pod') additionally FSDP-shards each
+    replica over the intra-pod 'data' axis.
+    """
+    from repro.sharding.rules import feasible_specs
+
+    fsdp = "data" if client_axis == "pod" else None
+    pspecs = feasible_specs(
+        param_specs(params_shape, client_axis=client_axis, fsdp_axis=fsdp),
+        params_shape, mesh)
+    ospecs = {"mu": pspecs} if "mu" in opt_shape else {
+        k: (pspecs if k in ("m", "v") else P()) for k in opt_shape}
+    to_sh = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                      is_leaf=lambda s: isinstance(s, P))
+    return {"params": to_sh(pspecs), "opt": to_sh(ospecs),
+            "step": NamedSharding(mesh, P())}
+
+
+def init_state(rng, cfg: ArchConfig, n_clients: int, optimizer: str = "sgd"):
+    """Materialised training state with client replicas (small configs only)."""
+    opt_init, _ = make_optimizer(optimizer)
+    params = TF.init_params(rng, cfg)
+    opt = opt_init(params)
+    return {
+        "params": tree_broadcast_leading(params, n_clients),
+        "opt": tree_broadcast_leading(opt, n_clients),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_state_shape(cfg: ArchConfig, n_clients: int, optimizer: str = "sgd"):
+    """Shape-only state (ShapeDtypeStructs) for the dry-run."""
+    return jax.eval_shape(
+        lambda k: init_state(k, cfg, n_clients, optimizer), jax.random.key(0))

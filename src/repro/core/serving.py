@@ -1,0 +1,61 @@
+"""Serving step builders: batched prefill + decode against sharded KV caches.
+
+Decode shapes (decode_32k, long_500k) lower ``serve_step``: ONE new token per
+sequence against a cache of seq_len (ring-buffer of window for SWA archs,
+O(1) recurrent state for SSM/RG-LRU). No client axis — serving replicates
+params over data/pod and shards the request batch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as TF
+from repro.sharding import param_specs
+from repro.sharding.rules import cache_specs
+
+
+def build_serve_step(cfg: ArchConfig):
+    """serve_step(params, cache, tokens) -> (logits, cache). tokens (B,1)."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = TF.decode_step(params, cfg, tokens, cache)
+        return logits, cache
+
+    return serve_step
+
+
+def build_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, cache, tokens, frontend=None):
+        return TF.prefill(params, cfg, tokens, cache, frontend)
+
+    return prefill_step
+
+
+def serve_shardings(cfg: ArchConfig, mesh, params_shape, cache_shape,
+                    data_axes=("data",)):
+    pspecs = param_specs(params_shape, client_axis=None)
+    cspecs = cache_specs(cache_shape, data_axes=data_axes)
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda s: isinstance(s, P))
+    tok_sh = NamedSharding(mesh, P(tuple(data_axes), None))
+    return to_sh(pspecs), to_sh(cspecs), tok_sh
+
+
+def greedy_decode(params, cfg: ArchConfig, prompt, n_steps: int, max_len: int):
+    """Simple reference decode loop (examples / tests)."""
+    B = prompt.shape[0]
+    cache = TF.init_cache(cfg, B, max_len)
+    logits, cache = TF.prefill(params, cfg, prompt, cache)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    out = [tok]
+    step = jax.jit(lambda p, t, c: TF.decode_step(p, cfg, t, c))
+    for _ in range(n_steps - 1):
+        logits, cache = step(params, tok, cache)
+        tok = jnp.argmax(logits, axis=-1)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

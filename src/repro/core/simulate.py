@@ -1,0 +1,184 @@
+"""N-client Local-SGD simulator (single host, vmapped clients).
+
+This is the engine behind the paper-fidelity convergence experiments
+(Figures 1–4, Tables 1–2): N client replicas live on a stacked leading axis,
+local steps are vmapped (no communication), and a communication round is a
+mean over the leading axis — bit-exact Algorithm 1 semantics.
+
+The same `Stage` objects drive this simulator and the distributed trainer
+(core/local_sgd.py), so the convergence experiments validate exactly the
+schedule code the production launcher runs.
+
+Supported algorithms
+  sync    — SyncSGD: k=1
+  lb      — Large-batch SyncSGD: k=1, batch ×= lb_factor
+  crpsgd  — CR-PSGD [38]: k=1, batch grows geometrically (masked fixed buffer)
+  local   — Local SGD (Alg. 1), fixed k, optional η_t = η₁/(1+αt) decay
+  stl_sc  — STL-SGD^sc (Alg. 2)
+  stl_nc1 — STL-SGD^nc Option 1 (Alg. 3, geometric, prox surrogate)
+  stl_nc2 — STL-SGD^nc Option 2 (Alg. 3, linear, prox surrogate)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import schedules as sched
+from repro.core.prox import prox_loss
+from repro.utils.tree import tree_broadcast_leading, tree_mean_leading, tree_zeros_like
+
+
+@dataclass
+class Record:
+    round: int      # communication rounds so far
+    iteration: int  # total iterations so far
+    value: float    # eval_fn(averaged params)
+
+
+def _sample_batch(data, rng, batch: int):
+    """data: client-local dict of arrays with leading dim n. Uniform minibatch."""
+    n = jax.tree.leaves(data)[0].shape[0]
+    idx = jax.random.randint(rng, (batch,), 0, n)
+    return jax.tree.map(lambda a: a[idx], data)
+
+
+def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
+                  lr_alpha: float, grow: float, b0: int, max_batch: int):
+    """One communication round = k vmapped local steps + 1 parameter average.
+
+    Returned fn: (carry, rng, data, center, eta) -> carry where
+    carry = (params_stacked, momentum_stacked, t_global_f32).
+    loss_fn(params, batch, center, weights) -> scalar.
+    """
+
+    def batch_weights(t):
+        if grow <= 1.0:
+            return jnp.ones((batch,), jnp.float32) / batch
+        bt = jnp.minimum(float(max_batch), float(b0) * grow ** t)
+        bt = jnp.clip(jnp.round(bt), 1, batch)
+        mask = (jnp.arange(batch) < bt).astype(jnp.float32)
+        return mask / bt
+
+    def round_fn(carry, rng_r, data, center, eta):
+        N = jax.tree.leaves(carry[0])[0].shape[0]
+
+        def local_step(c, rng_t):
+            params, mom, t = c
+            eta_t = eta / (1.0 + lr_alpha * t)
+            w = batch_weights(t)
+
+            def client(p, m, d, rng):
+                b = _sample_batch(d, rng, batch)
+                g = jax.grad(lambda q: loss_fn(q, b, center, w))(p)
+                m2 = jax.tree.map(lambda mm, gg: momentum * mm + gg, m, g)
+                p2 = jax.tree.map(lambda pp, mm: pp - eta_t * mm, p, m2)
+                return p2, m2
+
+            rngs = jax.random.split(rng_t, N)
+            params, mom = jax.vmap(client)(params, mom, data, rngs)
+            return (params, mom, t + 1.0), None
+
+        carry, _ = jax.lax.scan(local_step, carry, jax.random.split(rng_r, k))
+        params, mom, t = carry
+        params = tree_broadcast_leading(tree_mean_leading(params), N)
+        mom = tree_broadcast_leading(tree_mean_leading(mom), N)
+        return (params, mom, t)
+
+    return round_fn
+
+
+def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
+        eval_fn: Callable, *, eval_every: int = 1, max_rounds: Optional[int] = None,
+        target: Optional[float] = None, lr_alpha: float = 0.0,
+        chunk_rounds: int = 32) -> List[Record]:
+    """Run ``cfg.algo`` and return the (comm-round, objective) trace.
+
+    loss_fn(params, batch) -> scalar (per-client minibatch loss).
+    client_data: pytree with leading client axis N on every leaf.
+    eval_fn(params) -> scalar on the *averaged* model.
+    ``chunk_rounds`` communication rounds are scanned inside one jit call
+    (with per-round eval), so the Python loop runs ~chunk_rounds× less often.
+    """
+    N = jax.tree.leaves(client_data)[0].shape[0]
+    algo = cfg.algo
+    use_prox = algo in ("stl_nc1", "stl_nc2") and cfg.gamma_inv > 0.0
+    ploss = prox_loss(loss_fn, cfg.gamma_inv if use_prox else 0.0)
+
+    def wloss(params, batch, center, weights):
+        if algo == "crpsgd":
+            per = jax.vmap(
+                lambda x: ploss(params, jax.tree.map(lambda a: a[None], x), center)
+            )(batch)
+            return jnp.sum(per * weights)
+        return ploss(params, batch, center)
+
+    grow = cfg.batch_growth if algo == "crpsgd" else 1.0
+    stages = sched.make_stages(algo, cfg.eta1, cfg.T1, cfg.k1, cfg.n_stages, cfg.iid)
+
+    params = tree_broadcast_leading(init_params, N)
+    mom = tree_zeros_like(params)
+    rng = jax.random.key(cfg.seed)
+    history: List[Record] = [Record(0, 0, float(eval_fn(init_params)))]
+    rounds_done = 0
+    iters_done = 0
+    t_global = 0.0
+    eval_jit = jax.jit(eval_fn)
+
+    for stage in stages:
+        if algo == "lb":
+            k, b = 1, cfg.batch_per_client * 4
+        elif algo == "crpsgd":
+            k, b = 1, cfg.max_batch
+        else:
+            k, b = stage.k, cfg.batch_per_client
+        round_fn = make_round_fn(
+            wloss, k=k, batch=b, momentum=cfg.momentum, lr_alpha=lr_alpha,
+            grow=grow, b0=cfg.batch_per_client, max_batch=cfg.max_batch)
+        center = tree_mean_leading(params) if use_prox else init_params  # unused w/o prox
+
+        @partial(jax.jit, static_argnames=("n",))
+        def chunk_fn(carry, rng_c, data, ctr, eta, n):
+            def body(c, rng_r):
+                c = round_fn(c, rng_r, data, ctr, eta)
+                return c, eval_fn(tree_mean_leading(c[0]))
+            return jax.lax.scan(body, carry, jax.random.split(rng_c, n))
+
+        n_rounds = -(-stage.T // k)  # ceil
+        carry = (params, mom, jnp.asarray(t_global, jnp.float32))
+        done_in_stage = 0
+        while done_in_stage < n_rounds:
+            n = min(chunk_rounds, n_rounds - done_in_stage)
+            rng, sub = jax.random.split(rng)
+            carry, vals = chunk_fn(carry, sub, client_data, center, stage.eta, n)
+            vals = list(map(float, vals))
+            hit = None
+            for j, v in enumerate(vals):
+                rd = rounds_done + j + 1
+                if rd % eval_every == 0 or (done_in_stage + j + 1) == n_rounds \
+                        or (target is not None and v <= target and hit is None):
+                    history.append(Record(rd, iters_done + (j + 1) * k, v))
+                if target is not None and v <= target and hit is None:
+                    hit = rd
+            rounds_done += n
+            iters_done += n * k
+            done_in_stage += n
+            if hit is not None:
+                return history
+            if max_rounds is not None and rounds_done >= max_rounds:
+                return history
+        params, mom, tg = carry
+        t_global = float(tg)
+
+    return history
+
+
+def rounds_to_target(history: List[Record], target: float) -> Optional[int]:
+    for rec in history:
+        if rec.value <= target:
+            return rec.round
+    return None

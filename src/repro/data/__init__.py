@@ -1,0 +1,14 @@
+from repro.data.partition import partition_paper, partition_iid
+from repro.data.synthetic import (
+    make_binary_classification,
+    make_multiclass_images,
+    make_token_stream,
+)
+
+__all__ = [
+    "partition_paper",
+    "partition_iid",
+    "make_binary_classification",
+    "make_multiclass_images",
+    "make_token_stream",
+]

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots of the models the paper's
+# algorithm trains/serves (the paper's own contribution is a communication
+# schedule — kernel-free — so kernels/ serves the substrate):
+#   flash_attention/  blockwise online-softmax attention (causal/window/softcap/GQA)
+#   fused_update/     fused momentum-SGD update (Local SGD's k-per-round inner loop)
+#   ssd/              Mamba2 SSD chunked scan in matmul-dual (MXU) form
+# Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (public
+# jit-able wrapper), ref.py (pure-jnp oracle used by the allclose tests).

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Semantics: causal grouped-query attention with optional sliding window and
+logit soft-capping — exactly the masks the model stack uses
+(repro.models.attention), restated independently so kernel bugs can't hide
+behind shared code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D). Returns (B, Sq, H, D) fp32.
+
+    Queries are assumed to occupy the last Sq positions of the Sk-long
+    context (standard self-attention when Sq == Sk).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+
+    pos_q = jnp.arange(Sq) + (Sk - Sq)
+    pos_k = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= pos_k[None, :] <= pos_q[:, None]
+    if window is not None:
+        ok &= pos_k[None, :] > pos_q[:, None] - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, vf)
+    return out.reshape(B, Sq, H, D)

@@ -1,0 +1,3 @@
+from repro.kernels.fused_update.ops import sgd_update, tree_sgd_update
+
+__all__ = ["sgd_update", "tree_sgd_update"]

@@ -1,0 +1,26 @@
+"""Oracle for the fused Local-SGD update kernels.
+
+``sgd_update_ref``: the momentum-SGD update each client runs k times per
+communication round (Alg. 1 line 7):
+    m' = β·m + g (+ wd·p);  p' = p − η·m'
+
+``avg_update_ref``: the communication-round fusion (Alg. 1 line 5): average
+N client replicas (already reduced to a sum by the all-reduce) and rebroadcast
+— fused as one scale pass.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgd_update_ref(p, m, g, *, eta: float, beta: float = 0.0, wd: float = 0.0):
+    g32 = g.astype(jnp.float32)
+    if wd:
+        g32 = g32 + wd * p.astype(jnp.float32)
+    m2 = beta * m.astype(jnp.float32) + g32
+    p2 = p.astype(jnp.float32) - eta * m2
+    return p2.astype(p.dtype), m2.astype(m.dtype)
+
+
+def avg_update_ref(psum, n: int):
+    return (psum.astype(jnp.float32) / n).astype(psum.dtype)

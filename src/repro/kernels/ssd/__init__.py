@@ -1,0 +1,3 @@
+from repro.kernels.ssd.ops import ssd
+
+__all__ = ["ssd"]

@@ -1,0 +1,109 @@
+"""Mamba2 SSD — chunked state-space scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm [arXiv:2405.21060]: the GPU kernel's
+warp-level scan is replaced by the matmul-dual form — per chunk, the
+intra-chunk contribution is two (Q,Q)/(Q,N) matmuls on the MXU and the
+inter-chunk recurrence carries a (P,N) state in VMEM scratch across the
+sequential innermost grid axis (same accumulator pattern as flash attention).
+
+Grid: (batch, head, n_chunks); chunk axis innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_ref,
+                *, nc: int, Q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # (Q,)
+    A = a_ref[0].astype(jnp.float32)             # scalar for this head
+    B = b_ref[0, :, 0, :].astype(jnp.float32)    # (Q, N)
+    C = c_ref[0, :, 0, :].astype(jnp.float32)    # (Q, N)
+
+    dA = dt * A                                  # (Q,)
+    cums = jnp.cumsum(dA)                        # inclusive
+    # intra-chunk decay matrix L[i,j] = exp(cums_i - cums_j) for i >= j
+    diff = cums[:, None] - cums[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(qi >= kj, jnp.exp(diff), 0.0)
+
+    xdt = x * dt[:, None]                        # (Q, P)
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y = jax.lax.dot_general(CB * L, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    # off-diagonal: contribution of the state entering this chunk
+    state = state_ref[...]                       # (P, N)
+    y += jnp.exp(cums)[:, None] * jax.lax.dot_general(
+        C, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (Q,N)·(P,N)ᵀ -> (Q,P)
+
+    # state update: decay full chunk + inject dt-weighted inputs
+    seg_end = jnp.exp(cums[-1] - cums)           # (Q,)
+    inj = jax.lax.dot_general(xdt * seg_end[:, None], B,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = state * jnp.exp(cums[-1]) + inj
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        st_ref[0, 0, :, :] = state_ref[...].astype(st_ref.dtype)
+
+
+def ssd_chunked_kernel(x, dt, A, B, C, *, chunk: int = 128,
+                       interpret: bool = False):
+    """x: (b,S,H,P)  dt: (b,S,H)  A: (H,)  B,C: (b,S,G,N); G must divide H.
+
+    Returns (y (b,S,H,P) fp32-accurate in x.dtype, final_state (b,H,P,N) f32).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    kernel = functools.partial(_ssd_kernel, nc=nc, Q=Q)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda i, h, c: (i, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda i, h, c: (i, c, h)),
+            pl.BlockSpec((1,), lambda i, h, c: (h,)),
+            pl.BlockSpec((1, Q, 1, N), lambda i, h, c: (i, c, h // rep, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda i, h, c: (i, c, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda i, h, c: (i, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda i, h, c: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, st
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

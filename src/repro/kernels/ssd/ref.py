@@ -1,0 +1,38 @@
+"""Oracle for the SSD kernel: the exact sequential state-space recurrence.
+
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · h_t
+
+Deliberately the *recurrent* form (not the chunked dual) so the kernel and
+the model's chunked implementation are both checked against independent math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, initial_state=None):
+    """x: (b,S,H,P)  dt: (b,S,H)  A: (H,)  B,C: (b,S,G,N) with G dividing H.
+    Returns y (b,S,H,P) fp32, final_state (b,H,P,N) fp32."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)  # (b,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (b,H,P), (b,H), (b,H,N), (b,H,N)
+        decay = jnp.exp(dtt * A[None, :])[..., None, None]  # (b,H,1,1)
+        h = h * decay + jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    h0 = (jnp.zeros((b, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hT

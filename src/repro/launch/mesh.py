@@ -1,0 +1,32 @@
+"""Production meshes (TPU v5e pods).
+
+single-pod: (16, 16)   axes (data, model)   — 256 chips
+multi-pod : (2, 16, 16) axes (pod, data, model) — 512 chips
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state; the dry-run sets XLA_FLAGS for 512 host devices before any
+jax import, everything else sees the real 1-CPU topology.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# v5e hardware constants for the roofline (per chip / per link)
+PEAK_FLOPS_BF16 = 197e12   # FLOP/s
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s per link

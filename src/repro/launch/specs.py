@@ -1,0 +1,134 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape × mesh).
+
+``input_specs`` builds weak-type-correct, shardable abstract inputs with NO
+device allocation — the dry-run lowers/compiles against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, arch_for_shape
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import local_sgd as LS
+from repro.core import serving as SV
+from repro.models import transformer as TF
+from repro.sharding import param_specs
+from repro.sharding.rules import cache_specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def client_axes_for(mesh) -> Tuple[str, ...]:
+    """Paper-faithful client axes: every non-model axis (pod×data clients)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_clients_for(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return math.prod(sizes[a] for a in client_axes_for(mesh))
+
+
+def train_specs(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                client_axis=None, optimizer: str = "sgd"):
+    """Returns (state_shapes, batch_shapes, state_shardings, batch_shardings)."""
+    client_axis = client_axis or client_axes_for(mesh)
+    if isinstance(client_axis, str):
+        client_axis = (client_axis,)
+    C = n_clients_for(mesh) if set(client_axis) == set(client_axes_for(mesh)) else \
+        math.prod(dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in client_axis)
+
+    state = LS.init_state_shape(cfg, C, optimizer)
+    B, S = shape.global_batch, shape.seq_len
+    assert B % C == 0, (B, C)
+    S_text = S - (cfg.n_frontend_tokens if cfg.frontend else 0)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    hierarchical = tuple(client_axis) == ("pod",)
+    if hierarchical:
+        # per-pod clients: batch additionally split over the intra-pod data
+        # axis (SyncSGD within the pod) — (pod, data, b, S)
+        n_data = sizes["data"]
+        assert B % (C * n_data) == 0, (B, C, n_data)
+        lead_shape = (C, n_data, B // (C * n_data))
+        lead_spec = ("pod", "data", None)
+    else:
+        lead_shape = (C, B // C)
+        lead_spec = (client_axis, None)
+    batch = {
+        "tokens": _sds(lead_shape + (S_text,), jnp.int32),
+        "labels": _sds(lead_shape + (S_text,), jnp.int32),
+    }
+    if cfg.frontend:
+        batch["frontend"] = _sds(
+            lead_shape + (cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+
+    ca = client_axis if len(client_axis) > 1 else client_axis[0]
+    st_sh = LS.state_shardings(cfg, mesh, state["params"], state["opt"], ca)
+    b_sh = {
+        "tokens": NamedSharding(mesh, P(*lead_spec, None)),
+        "labels": NamedSharding(mesh, P(*lead_spec, None)),
+    }
+    if cfg.frontend:
+        b_sh["frontend"] = NamedSharding(mesh, P(*lead_spec, None, None))
+    return state, batch, st_sh, b_sh, ca
+
+
+def serve_specs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Returns (params_shape, cache_shape, tokens_shape, shardings...)."""
+    B, S = shape.global_batch, shape.seq_len
+    params = TF.init_params_shape(cfg)
+    cache = jax.eval_shape(lambda: TF.init_cache(cfg, B, S))
+    data_axes = client_axes_for(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_data = math.prod(sizes[a] for a in data_axes)
+
+    if B % n_data == 0:
+        batch_axes, seq_axes = data_axes, ()
+    else:
+        # batch too small to shard (long_500k): sequence-shard the KV cache
+        batch_axes, seq_axes = (), data_axes
+
+    from repro.sharding.rules import feasible_specs
+
+    pspecs = feasible_specs(param_specs(params, client_axis=None), params, mesh)
+    cspecs = feasible_specs(
+        cache_specs(cache, data_axes=batch_axes, seq_axes=seq_axes), cache, mesh)
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda s: isinstance(s, P))
+
+    if shape.mode == "decode":
+        tokens = _sds((B, 1), jnp.int32)
+    else:
+        S_text = S - (cfg.n_frontend_tokens if cfg.frontend else 0)
+        tokens = _sds((B, S_text), jnp.int32)
+    tok_spec = P(batch_axes if batch_axes else None, None)
+    out = {
+        "params": params, "cache": cache, "tokens": tokens,
+        "params_sh": to_sh(pspecs), "cache_sh": to_sh(cspecs),
+        "tokens_sh": NamedSharding(mesh, tok_spec),
+    }
+    if shape.mode == "prefill" and cfg.frontend:
+        out["frontend"] = _sds((B, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        out["frontend_sh"] = NamedSharding(mesh, P(batch_axes if batch_axes else None, None, None))
+    return out
+
+
+def input_specs(arch_name: str, shape_name: str, mesh, overrides=None, **kw):
+    """Unified entry: abstract inputs + shardings for one matrix cell."""
+    shape = SHAPES[shape_name]
+    cfg = arch_for_shape(arch_name, shape_name)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if shape.mode == "train":
+        return ("train", cfg, *train_specs(cfg, shape, mesh, **kw))
+    return ("serve", cfg, serve_specs(cfg, shape, mesh))

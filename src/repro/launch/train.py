@@ -1,0 +1,136 @@
+"""Training launcher.
+
+Runs STL-SGD (or a baseline) on an (arch × mesh) with synthetic LM data.
+On this CPU container it drives reduced (smoke) configs end-to-end; on real
+TPU pods the same code paths run the full configs (the dry-run proves they
+lower/compile).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+      --algo stl_sc --eta1 0.05 --k1 4 --T1 32 --stages 3 --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import SHAPES, get_arch
+from repro.configs.base import TrainConfig
+from repro.core import local_sgd as LS
+from repro.core.stl_sgd import StagewiseDriver
+from repro.data.synthetic import make_token_stream
+from repro.launch.mesh import make_host_mesh
+from repro.utils.logging import get_logger
+
+log = get_logger("train")
+
+
+def synthetic_batches(cfg, n_clients, batch_per_client, seq_len, seed=0,
+                      non_iid=False):
+    """Infinite (C, B, S) token/label batches from per-client shards."""
+    shards = make_token_stream(200_000, cfg.vocab_size, n_clients, seed=seed,
+                               non_iid=non_iid)
+    rng = np.random.RandomState(seed)
+    fe_rng = np.random.RandomState(seed + 1)
+    n = shards.shape[1] - seq_len - 1
+    while True:
+        starts = rng.randint(0, n, size=(n_clients, batch_per_client))
+        toks = np.stack([
+            np.stack([shards[c, s: s + seq_len] for s in starts[c]])
+            for c in range(n_clients)])
+        labs = np.stack([
+            np.stack([shards[c, s + 1: s + seq_len + 1] for s in starts[c]])
+            for c in range(n_clients)])
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+        if cfg.frontend:
+            batch["frontend"] = jnp.asarray(fe_rng.randn(
+                n_clients, batch_per_client, cfg.n_frontend_tokens,
+                cfg.frontend_dim).astype(np.float32), dtype=jnp.bfloat16)
+        yield batch
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--algo", default="stl_sc",
+                    choices=["sync", "lb", "crpsgd", "local", "stl_sc",
+                             "stl_nc1", "stl_nc2"])
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--eta1", type=float, default=0.05)
+    ap.add_argument("--k1", type=float, default=4)
+    ap.add_argument("--T1", type=int, default=32)
+    ap.add_argument("--stages", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--non-iid", action="store_true")
+    ap.add_argument("--gamma-inv", type=float, default=0.0)
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    tcfg = TrainConfig(algo=args.algo, eta1=args.eta1, k1=args.k1, T1=args.T1,
+                       n_stages=args.stages, iid=not args.non_iid,
+                       gamma_inv=args.gamma_inv, momentum=args.momentum,
+                       seed=args.seed)
+    mesh = make_host_mesh(1, 1)
+    C = args.clients
+
+    log.info("arch=%s algo=%s clients=%d", cfg.name, args.algo, C)
+    state = LS.init_state(jax.random.key(args.seed), cfg, C, args.optimizer)
+    train_local, sync_step, _ = LS.build_train_steps(
+        cfg, mesh, client_axis="data", optimizer=args.optimizer,
+        momentum=args.momentum)
+
+    uses_center = args.algo in ("stl_nc1", "stl_nc2") and args.gamma_inv > 0
+    if uses_center:
+        from repro.core.prox import prox_loss
+
+        base = lambda p, c, b: LS.lm_loss(p, c, b)
+        pl = prox_loss(lambda p, b: LS.lm_loss(p, cfg, b), args.gamma_inv)
+
+        def loss_with_center(p, c, b, center):
+            return pl(p, b, center)
+
+        def train_with_center(state, batch, eta, center):
+            # rebuild a step closing over the center
+            tl, _, _ = LS.build_train_steps(
+                cfg, mesh, client_axis="data", optimizer=args.optimizer,
+                momentum=args.momentum,
+                loss_fn=lambda p, c, b: pl(p, b, center))
+            return tl(state, batch, eta)
+
+        train_fn = jax.jit(lambda s, b, e, c: train_with_center(s, b, e, c))
+    else:
+        train_fn = jax.jit(train_local)
+    sync_fn = jax.jit(sync_step)
+
+    driver = StagewiseDriver(tcfg, train_fn, sync_fn, uses_center=uses_center)
+    batches = synthetic_batches(cfg, C, args.batch, args.seq, args.seed,
+                                args.non_iid)
+    t0 = time.time()
+    ds = driver.run(state, batches, max_iters=args.steps)
+    dt = time.time() - t0
+    log.info("done: %d iters, %d comm rounds, %.1fs (%.1f it/s)",
+             ds.iters_total, ds.rounds_total, dt, ds.iters_total / max(dt, 1e-9))
+    for r in ds.results:
+        log.info("  stage %d: k=%d rounds=%d loss=%.4f", r.stage, r.k,
+                 r.rounds, r.mean_loss)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, ds.iters_total, ds.state["params"],
+                        {"algo": args.algo, "rounds": ds.rounds_total})
+        log.info("checkpoint written to %s", args.ckpt_dir)
+    return ds
+
+
+if __name__ == "__main__":
+    main()

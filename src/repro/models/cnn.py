@@ -1,0 +1,119 @@
+"""ResNet18 / VGG16 — the paper's §5.2 non-convex experiments (CIFAR-10).
+
+Pure-JAX conv nets (functional, dict params). Group-norm free: we use
+BatchNorm-less "NF-style" scaled residuals for simplicity and determinism
+across clients (BatchNorm's cross-batch statistics interact badly with the
+Local SGD client partition; the paper does not depend on BN specifics).
+A ``width`` knob lets the CPU benchmarks run reduced-width variants of the
+same topology.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ---------------------------------------------------------------------------
+# ResNet18
+# ---------------------------------------------------------------------------
+
+_RESNET18_STAGES = ((2, 1), (2, 2), (2, 2), (2, 2))  # (blocks, first-stride) per stage
+
+
+def init_resnet18(rng, n_classes: int = 10, width: int = 64):
+    keys = iter(jax.random.split(rng, 64))
+    p = {"stem": _conv_init(next(keys), 3, 3, 3, width)}
+    cin = width
+    stages = []
+    for si, (blocks, stride) in enumerate(_RESNET18_STAGES):
+        cout = width * (2 ** si)
+        blist = []
+        for b in range(blocks):
+            s = stride if b == 0 else 1
+            blk = {
+                "conv1": _conv_init(next(keys), 3, 3, cin, cout),
+                "conv2": _conv_init(next(keys), 3, 3, cout, cout),
+                "scale1": jnp.ones((cout,)), "scale2": jnp.zeros((cout,)),
+            }
+            if s != 1 or cin != cout:
+                blk["proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+            blk["stride"] = s  # static int (not a leaf — removed below)
+            blist.append(blk)
+            cin = cout
+        stages.append(blist)
+    # strip static ints out of the pytree; keep strides separately
+    strides = [[blk.pop("stride") for blk in st] for st in stages]
+    p["stages"] = stages
+    p["head_w"] = jax.random.normal(next(keys), (cin, n_classes), jnp.float32) * 0.01
+    p["head_b"] = jnp.zeros((n_classes,))
+    return p, strides
+
+
+def apply_resnet18(params, strides, x):
+    """x: (B, 32, 32, 3) → logits (B, n_classes)."""
+    h = _conv(x, params["stem"])
+    for st, st_strides in zip(params["stages"], strides):
+        for blk, s in zip(st, st_strides):
+            inp = h
+            h = jax.nn.relu(_conv(inp, blk["conv1"], s) * blk["scale1"])
+            h = _conv(h, blk["conv2"]) * (1.0 + blk["scale2"])
+            sc = _conv(inp, blk["proj"], s) if "proj" in blk else inp
+            h = jax.nn.relu(h + sc)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["head_w"] + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# VGG16
+# ---------------------------------------------------------------------------
+
+_VGG16_PLAN = ((2, 1), (2, 2), (3, 4), (3, 8), (3, 8))  # (convs, width-mult) per stage
+
+
+def init_vgg16(rng, n_classes: int = 10, width: int = 64):
+    keys = iter(jax.random.split(rng, 64))
+    p = {"stages": []}
+    cin = 3
+    for convs, mult in _VGG16_PLAN:
+        cout = width * mult
+        st = []
+        for _ in range(convs):
+            st.append({"conv": _conv_init(next(keys), 3, 3, cin, cout),
+                       "scale": jnp.ones((cout,))})
+            cin = cout
+        p["stages"].append(st)
+    p["fc1"] = jax.random.normal(next(keys), (cin, 4 * width), jnp.float32) * 0.02
+    p["fc2"] = jax.random.normal(next(keys), (4 * width, n_classes), jnp.float32) * 0.02
+    p["b1"] = jnp.zeros((4 * width,))
+    p["b2"] = jnp.zeros((n_classes,))
+    return p
+
+
+def apply_vgg16(params, x):
+    h = x
+    for st in params["stages"]:
+        for blk in st:
+            h = jax.nn.relu(_conv(h, blk["conv"]) * blk["scale"])
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = jnp.mean(h, axis=(1, 2))
+    h = jax.nn.relu(h @ params["fc1"] + params["b1"])
+    return h @ params["fc2"] + params["b2"]
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))

@@ -1,0 +1,32 @@
+"""L2-regularized logistic regression — the paper's §5.1 convex problem.
+
+    min_θ (1/n) Σ log(1 + exp(-y_i x_iᵀθ)) + (λ/2)||θ||²   (Eq. 7)
+
+λ > 0 makes this λ-strongly convex; the paper sets λ = 1/n.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_params(rng, n_features: int):
+    return {"theta": jnp.zeros((n_features,), jnp.float32)}
+
+
+def loss_fn(params, batch, lam: float):
+    """batch: {"x": (B, d), "y": (B,) in {-1, +1}}."""
+    margin = batch["y"] * (batch["x"] @ params["theta"])
+    # log(1 + exp(-m)) = softplus(-m), numerically stable
+    data_loss = jnp.mean(jax.nn.softplus(-margin))
+    reg = 0.5 * lam * jnp.sum(jnp.square(params["theta"]))
+    return data_loss + reg
+
+
+def full_objective(params, x, y, lam: float):
+    return loss_fn(params, {"x": x, "y": y}, lam)
+
+
+def accuracy(params, x, y):
+    pred = jnp.sign(x @ params["theta"])
+    return jnp.mean(pred == y)

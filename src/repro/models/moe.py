@@ -1,0 +1,119 @@
+"""Mixture-of-Experts layer: top-k router + shared experts.
+
+Dispatch is capacity-based (GShard-style) but without the (T,E,C) one-hot
+einsum: token→slot assignment is computed with a cumsum rank and realised with
+scatter/gather, so compiled FLOPs stay proportional to *active* expert compute
+(the batched (E,C,d)×(E,d,f) matmuls). Expert weights live on the `model` mesh
+axis (expert parallelism); the scatter into the E-sharded buffer and the
+gather back are where XLA inserts the all-to-all-like collectives the paper's
+roofline tracks for MoE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import dense_init
+from repro.sharding import shard
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    moe = cfg.moe
+    assert moe is not None
+    d, de, E = cfg.d_model, moe.d_expert, moe.n_experts
+    keys = jax.random.split(key, 6)
+    p = {
+        "w_router": dense_init(keys[0], d, E, jnp.float32),
+        "we_gate": _expert_init(keys[1], E, d, de, dtype),
+        "we_up": _expert_init(keys[2], E, d, de, dtype),
+        "we_down": _expert_init(keys[3], E, de, d, dtype),
+    }
+    if moe.n_shared > 0:
+        # shared experts = one dense SwiGLU of width n_shared * d_expert
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(keys[4], d, moe.n_shared * de, dtype)
+    return p
+
+
+def _expert_init(key, E, d_in, d_out, dtype):
+    scale = 1.0 / (d_in ** 0.5)
+    return (jax.random.normal(key, (E, d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def _moe_pool(params, moe: MoEConfig, xt):
+    """Dispatch+compute+combine for one token pool. xt: (T, d) → (T, d), aux."""
+    T, d = xt.shape
+    E, k = moe.n_experts, moe.top_k
+
+    # --- router (fp32 for stability) ---
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["w_router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (T,k)
+    gate_vals = gate_vals / jnp.clip(jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- load-balance aux loss (Switch-style) ---
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = moe.aux_coef * E * jnp.sum(me * ce)
+
+    # --- capacity assignment ---
+    C = max(1, min(T, int(T * k / E * moe.capacity_factor)))
+    flat_e = idx.reshape(-1)                       # (T*k,) expert id
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    rank = jnp.cumsum(onehot, axis=0) - 1          # running count per expert
+    rank = jnp.sum(rank * onehot, axis=-1)         # (T*k,) position within expert
+    keep = rank < C
+    slot = flat_e * C + jnp.minimum(rank, C - 1)   # (T*k,) in [0, E*C)
+    slot = jnp.where(keep, slot, E * C)            # overflow → dropped row
+
+    # --- dispatch: scatter tokens into (E*C, d) buffers ---
+    token_of = jnp.repeat(jnp.arange(T), k)        # (T*k,)
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[slot].set(xt[token_of])
+    buf = buf[: E * C].reshape(E, C, d)
+
+    # --- expert compute: batched SwiGLU over (E, C, d) ---
+    h = jnp.einsum("ecd,edf->ecf", buf, params["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["we_up"])
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, params["we_down"])
+
+    # --- combine: gather each assignment's slot output, weight, scatter-add ---
+    out_flat = out.reshape(E * C, d)
+    picked = jnp.where(keep[:, None], out_flat[jnp.minimum(slot, E * C - 1)], 0.0)
+    y = jnp.zeros((T, d), xt.dtype).at[token_of].add(
+        picked * gate_vals.reshape(-1)[:, None].astype(xt.dtype)
+    )
+    return y, aux
+
+
+def apply_moe(params, cfg: ArchConfig, x):
+    """x: (B, S, d) → (B, S, d), aux_loss (scalar, load-balance).
+
+    Dispatch is *grouped per batch row* (EXPERIMENTS.md §Perf iteration b1):
+    each data-shard's tokens form their own capacity pool, so the scatter into
+    the expert buffers is local to the shard and the expert matmuls are batch
+    dims over (group × expert) — the only cross-device traffic left is the
+    E-sharded combine (≈ one y-sized all-reduce over `model`). The flat
+    global-pool variant (moe.grouped=False) all-gathers the (E, C_global, d)
+    buffers instead — ~100× more collective bytes at prefill_32k scale.
+    """
+    moe = cfg.moe
+    B, S, d = x.shape
+    if not getattr(moe, "grouped", True):
+        y, aux = _moe_pool(params, moe, x.reshape(B * S, d))
+        y = y.reshape(B, S, d)
+    else:
+        y, auxes = jax.vmap(lambda xt: _moe_pool(params, moe, xt))(
+            x.reshape(B, S, d))
+        aux = jnp.mean(auxes)
+    y = shard(y, None, None, None)
+
+    if "shared" in params:
+        from repro.models.layers import apply_mlp
+
+        y = y + apply_mlp(params["shared"], x)
+
+    return y, aux

@@ -1,0 +1,92 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin). [arXiv:2402.19427]
+
+TPU adaptation: the token recurrence h_t = a_t ⊙ h_{t-1} + √(1-a_t²) ⊙ (i_t ⊙ x_t)
+is a diagonal linear recurrence, evaluated with ``jax.lax.associative_scan``
+(log-depth, VPU-friendly) instead of a sequential CUDA scan. Decode keeps the
+O(d) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+from repro.models.ssm import _causal_conv
+from repro.sharding import shard
+
+_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+def init_rglru(key, cfg: ArchConfig, dtype):
+    lru = cfg.rglru.lru_width or cfg.d_model
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(keys[0], d, lru, dtype),
+        "w_gate_lru": dense_init(keys[1], d, lru, dtype),
+        "conv_lru": (jax.random.normal(keys[2], (cfg.rglru.d_conv, lru), jnp.float32) * 0.1).astype(dtype),
+        "w_a": dense_init(keys[3], lru, lru, dtype),
+        "w_i": dense_init(keys[4], lru, lru, dtype),
+        # a = sigmoid(a_param); init so a ≈ 0.9..0.999 (Griffin: Λ init)
+        "a_param": jnp.full((lru,), 4.0, jnp.float32),
+        "w_out_lru": dense_init(keys[5], lru, d, dtype),
+    }
+
+
+def _rg_lru_scan(xb, r, i, a_param, initial_state=None):
+    """xb, r, i: (B,S,lru) fp32. Returns h (B,S,lru), final state (B,lru)."""
+    log_a = -_C * jax.nn.softplus(a_param)[None, None, :] * r  # log a_t  (negative)
+    a = jnp.exp(log_a)
+    gated = i * xb
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if initial_state is not None:
+        b = b.at[:, 0].add(a[:, 0] * initial_state)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def apply_rglru(params, cfg: ArchConfig, x, cache=None):
+    """x: (B,S,d). cache: None or {"conv": (B,K-1,lru), "state": (B,lru)}."""
+    B, S, d = x.shape
+    gate = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_gate_lru"]))
+    xb = jnp.einsum("bsd,df->bsf", x, params["w_x"])
+    xb = shard(xb, None, None, "model")
+    conv_carry = None if cache is None else cache["conv"]
+    xb, new_conv = _causal_conv(xb, params["conv_lru"], conv_carry)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsf,fg->bsg", xb, params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsf,fg->bsg", xb, params["w_i"]).astype(jnp.float32))
+    xb32 = xb.astype(jnp.float32)
+
+    if cache is None or S > 1:
+        init_state = None if cache is None else cache["state"].astype(jnp.float32)
+        h, final = _rg_lru_scan(xb32, r, i, params["a_param"], init_state)
+    else:
+        st = cache["state"].astype(jnp.float32)
+        log_a = -_C * jax.nn.softplus(params["a_param"])[None, :] * r[:, 0]
+        a = jnp.exp(log_a)
+        b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i[:, 0] * xb32[:, 0])
+        final = a * st + b
+        h = final[:, None, :]
+
+    out = jnp.einsum("bsf,fd->bsd", (h.astype(x.dtype) * gate), params["w_out_lru"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "state": final.astype(cache["state"].dtype)}
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype):
+    lru = cfg.rglru.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru.d_conv - 1, lru), dtype),
+        "state": jnp.zeros((batch, lru), jnp.float32),
+    }

@@ -1,0 +1,304 @@
+"""Decoder LM assembled from an ArchConfig.
+
+Layer stack = [head (unrolled, e.g. deepseek's dense first layers)]
+            + [scan over groups of len(block_pattern) sub-layers]
+            + [tail (unrolled remainder)].
+
+Scan-over-groups keeps HLO size O(pattern) instead of O(n_layers) — essential
+for compiling 60-layer models 80× in the dry-run matrix on one CPU core.
+
+Public API:
+  init_params(rng, cfg)                  -> params pytree
+  forward(params, cfg, tokens, frontend) -> (logits, aux)    # train / scoring
+  init_cache(cfg, batch, max_len, dtype) -> cache pytree
+  prefill(params, cfg, tokens, cache, frontend) -> (logits, cache)
+  decode_step(params, cfg, tokens, cache)       -> (logits, cache)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+from repro.models.layers import apply_mlp, dense_init, embed_init, init_mlp, rms_norm, softcap
+from repro.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+VOCAB_PAD = 256  # embedding rows padded so logits always shard on `model`
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return -(-cfg.vocab_size // VOCAB_PAD) * VOCAB_PAD
+
+
+def _plan(cfg: ArchConfig):
+    """Split layers into (head_kinds, n_groups, pattern, tail_kinds)."""
+    kinds = cfg.layer_kinds()
+    n_head = cfg.moe.n_dense_layers if cfg.moe else 0
+    body = kinds[n_head:]
+    p = len(cfg.block_pattern)
+    n_groups = len(body) // p
+    tail = body[n_groups * p :]
+    return kinds[:n_head], n_groups, cfg.block_pattern, tail
+
+
+def _layer_uses_moe(cfg: ArchConfig, in_head: bool) -> bool:
+    return cfg.moe is not None and not in_head
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg: ArchConfig, kind: str, in_head: bool, dtype):
+    keys = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"ln1": jnp.zeros((d,), dtype)}
+    if kind in ("G", "L"):
+        p["attn"] = A.init_attention(keys[0], cfg, dtype)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        if _layer_uses_moe(cfg, in_head):
+            p["moe"] = MOE.init_moe(keys[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(keys[1], d, cfg.d_ff, dtype)
+    elif kind == "M":
+        p["mamba"] = SSM.init_mamba2(keys[0], cfg, dtype)
+    elif kind == "R":
+        p["lru"] = RG.init_rglru(keys[0], cfg, dtype)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["mlp"] = init_mlp(keys[1], d, cfg.d_ff, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(rng, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    head_kinds, n_groups, pattern, tail_kinds = _plan(cfg)
+    keys = jax.random.split(rng, 8)
+
+    vp = padded_vocab(cfg)
+    params = {"embed": embed_init(keys[0], vp, cfg.d_model, dtype),
+              "final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], cfg.d_model, vp, dtype)
+    if cfg.frontend:
+        params["proj_frontend"] = dense_init(keys[2], cfg.frontend_dim, cfg.d_model, dtype)
+
+    params["head"] = [
+        _init_sublayer(k, cfg, kind, True, dtype)
+        for k, kind in zip(jax.random.split(keys[3], max(1, len(head_kinds))), head_kinds)
+    ][: len(head_kinds)]
+
+    if n_groups > 0:
+        def one_group(k):
+            ks = jax.random.split(k, len(pattern))
+            return {f"sub{i}": _init_sublayer(ks[i], cfg, kind, False, dtype)
+                    for i, kind in enumerate(pattern)}
+
+        group_keys = jax.random.split(keys[4], n_groups)
+        groups = [one_group(k) for k in group_keys]
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *groups)
+    else:
+        params["blocks"] = {}
+
+    params["tail"] = [
+        _init_sublayer(k, cfg, kind, False, dtype)
+        for k, kind in zip(jax.random.split(keys[5], max(1, len(tail_kinds))), tail_kinds)
+    ][: len(tail_kinds)]
+    return params
+
+
+def init_params_shape(cfg: ArchConfig):
+    """Shapes-only init (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer apply (shared by forward / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _apply_sublayer(p, cfg: ArchConfig, kind: str, in_head: bool, x, pos_q,
+                    cache=None, cache_pos=None):
+    """Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.seq_parallel and cache is None:
+        # residual stream sequence-sharded over `model` between blocks:
+        # the constraint below materialises as reduce-scatter on the way out
+        # of the previous block and all-gather before this block's matmuls.
+        x = shard(x, None, "model", None)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("G", "L"):
+        att_out, new_c = A.apply_attention(
+            p["attn"], cfg, h, pos_q, is_local=(kind == "L"),
+            cache=cache, cache_pos=cache_pos)
+        x = x + att_out
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            m, aux = MOE.apply_moe(p["moe"], cfg, h2)
+        else:
+            m = apply_mlp(p["mlp"], h2)
+        x = x + m
+    elif kind == "M":
+        out, new_c = SSM.apply_mamba2(p["mamba"], cfg, h, cache=cache)
+        x = x + out
+    elif kind == "R":
+        out, new_c = RG.apply_rglru(p["lru"], cfg, h, cache=cache)
+        x = x + out
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h2)
+    else:
+        raise ValueError(kind)
+    return x, aux, new_c
+
+
+def _run_stack(params, cfg: ArchConfig, x, pos_q, caches=None, cache_pos=None):
+    """Apply head + scanned groups + tail. caches mirrors params structure."""
+    head_kinds, n_groups, pattern, tail_kinds = _plan(cfg)
+    decoding = caches is not None
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {"head": [], "blocks": None, "tail": []} if decoding else None
+
+    for i, kind in enumerate(head_kinds):
+        c = caches["head"][i] if decoding else None
+        layer_fn = _apply_sublayer if decoding else jax.checkpoint(
+            _apply_sublayer, static_argnums=(1, 2, 3))
+        x, aux, nc = layer_fn(params["head"][i], cfg, kind, True, x, pos_q, c, cache_pos)
+        aux_total += aux
+        if decoding:
+            new_caches["head"].append(nc)
+
+    if n_groups > 0:
+        if decoding:
+            def body(carry, xs):
+                x, aux_acc = carry
+                gp, gc = xs
+                ncs = {}
+                for i, kind in enumerate(pattern):
+                    x, aux, nc = _apply_sublayer(
+                        gp[f"sub{i}"], cfg, kind, False, x, pos_q, gc[f"sub{i}"], cache_pos)
+                    aux_acc += aux
+                    ncs[f"sub{i}"] = nc
+                return (x, aux_acc), ncs
+
+            (x, aux_total), scanned = jax.lax.scan(
+                body, (x, aux_total), (params["blocks"], caches["blocks"]))
+            new_caches["blocks"] = scanned
+        else:
+            @jax.checkpoint  # remat: recompute block activations in backward
+            def body(carry, gp):
+                x, aux_acc = carry
+                for i, kind in enumerate(pattern):
+                    x, aux, _ = _apply_sublayer(gp[f"sub{i}"], cfg, kind, False, x, pos_q)
+                    aux_acc += aux
+                return (x, aux_acc), None
+
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["blocks"])
+    elif decoding:
+        new_caches["blocks"] = {}
+
+    for i, kind in enumerate(tail_kinds):
+        c = caches["tail"][i] if decoding else None
+        layer_fn = _apply_sublayer if decoding else jax.checkpoint(
+            _apply_sublayer, static_argnums=(1, 2, 3))
+        x, aux, nc = layer_fn(params["tail"][i], cfg, kind, False, x, pos_q, c, cache_pos)
+        aux_total += aux
+        if decoding:
+            new_caches["tail"].append(nc)
+
+    return x, aux_total, new_caches
+
+
+def _logits(params, cfg: ArchConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = softcap(logits, cfg.final_softcap)
+    vp = logits.shape[-1]
+    if vp != cfg.vocab_size:  # mask pad columns out of softmax/argmax
+        pad_mask = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return shard(logits, None, None, "model")
+
+
+def _embed_tokens(params, cfg: ArchConfig, tokens, frontend_embeds):
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    if cfg.frontend is not None and frontend_embeds is not None:
+        fe = jnp.einsum("bnf,fd->bnd", frontend_embeds.astype(x.dtype), params["proj_frontend"])
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ArchConfig, tokens, frontend_embeds=None):
+    """Full-sequence scoring. tokens: (B, S) int32. Returns (logits, aux)."""
+    x = _embed_tokens(params, cfg, tokens, frontend_embeds)
+    S = x.shape[1]
+    pos_q = jnp.arange(S, dtype=jnp.int32)
+    x, aux, _ = _run_stack(params, cfg, x, pos_q)
+    return _logits(params, cfg, x), aux
+
+
+def _init_layer_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("G", "L"):
+        return A.init_attention_cache(cfg, kind == "L", batch, max_len, dtype)
+    if kind == "M":
+        return SSM.init_mamba2_cache(cfg, batch, dtype)
+    if kind == "R":
+        return RG.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    head_kinds, n_groups, pattern, tail_kinds = _plan(cfg)
+    cache = {
+        "pos": jnp.zeros((), jnp.int32),
+        "head": [_init_layer_cache(cfg, k, batch, max_len, dtype) for k in head_kinds],
+        "tail": [_init_layer_cache(cfg, k, batch, max_len, dtype) for k in tail_kinds],
+    }
+    if n_groups > 0:
+        one = {f"sub{i}": _init_layer_cache(cfg, k, batch, max_len, dtype)
+               for i, k in enumerate(pattern)}
+        cache["blocks"] = jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (n_groups,) + v.shape), one)
+    else:
+        cache["blocks"] = {}
+    return cache
+
+
+def _with_cache(params, cfg, tokens, cache, frontend_embeds=None):
+    x = _embed_tokens(params, cfg, tokens, frontend_embeds)
+    S = x.shape[1]
+    cache_pos = cache["pos"]
+    pos_q = cache_pos + jnp.arange(S, dtype=jnp.int32)
+    layer_caches = {k: cache[k] for k in ("head", "blocks", "tail")}
+    x, _, new_caches = _run_stack(params, cfg, x, pos_q, layer_caches, cache_pos)
+    new_caches["pos"] = cache_pos + S
+    return _logits(params, cfg, x), new_caches
+
+
+def prefill(params, cfg: ArchConfig, tokens, cache, frontend_embeds=None):
+    return _with_cache(params, cfg, tokens, cache, frontend_embeds)
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache):
+    """tokens: (B, 1). One decode step against the cache."""
+    return _with_cache(params, cfg, tokens, cache)

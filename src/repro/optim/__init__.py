@@ -1,0 +1,3 @@
+from repro.optim.sgd import sgd_init, sgd_update, adamw_init, adamw_update, make_optimizer
+
+__all__ = ["sgd_init", "sgd_update", "adamw_init", "adamw_update", "make_optimizer"]

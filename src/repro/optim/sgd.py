@@ -1,0 +1,75 @@
+"""Optimizers (functional, pytree state) + factory.
+
+SGD(+momentum) is the paper's optimizer; AdamW is provided for the LLM
+training examples. Both expose (init, update) with the same signature so the
+Local-SGD step builder is optimizer-agnostic. Optimizer state is averaged at
+communication rounds alongside parameters (DESIGN.md §2) so k=1 Local SGD is
+bit-identical to SyncSGD.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params):
+    return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+
+def sgd_update(params, grads, state, *, eta, momentum: float = 0.0,
+               weight_decay: float = 0.0):
+    def upd(p, g, m):
+        g32 = g.astype(jnp.float32)
+        if weight_decay:
+            g32 = g32 + weight_decay * p.astype(jnp.float32)
+        m2 = momentum * m + g32
+        p2 = p.astype(jnp.float32) - eta * m2
+        return p2.astype(p.dtype), m2
+
+    out = jax.tree.map(upd, params, grads, state["mu"])
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"mu": new_m}
+
+
+def adamw_init(params):
+    z = lambda p: jnp.zeros_like(p, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adamw_update(params, grads, state, *, eta, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay: float = 0.0):
+    t = state["t"] + 1.0
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - eta * step).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    pick = lambda i: jax.tree.map(lambda t_: t_[i], out, is_leaf=lambda t_: isinstance(t_, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+
+
+def make_optimizer(name: str, momentum: float = 0.0, weight_decay: float = 0.0):
+    """Returns (init_fn, update_fn(params, grads, state, eta))."""
+    if name == "sgd":
+        def update(params, grads, state, eta):
+            return sgd_update(params, grads, state, eta=eta,
+                              momentum=momentum, weight_decay=weight_decay)
+        return sgd_init, update
+    if name == "adamw":
+        def update(params, grads, state, eta):
+            return adamw_update(params, grads, state, eta=eta,
+                                weight_decay=weight_decay)
+        return adamw_init, update
+    raise ValueError(name)

@@ -1,0 +1,3 @@
+from repro.sharding.rules import shard, param_specs, DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+__all__ = ["shard", "param_specs", "DATA_AXIS", "MODEL_AXIS", "POD_AXIS"]

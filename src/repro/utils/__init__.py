@@ -1,0 +1,25 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_scale,
+    tree_mean_leading,
+    tree_zeros_like,
+    tree_stack_leading,
+    tree_take,
+    tree_l2_norm,
+    tree_size,
+    tree_bytes,
+)
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_mean_leading",
+    "tree_zeros_like",
+    "tree_stack_leading",
+    "tree_take",
+    "tree_l2_norm",
+    "tree_size",
+    "tree_bytes",
+    "get_logger",
+]

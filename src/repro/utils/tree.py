@@ -1,0 +1,88 @@
+"""Pytree helpers used across the framework.
+
+These are deliberately tiny wrappers over ``jax.tree_util`` — kept in one
+place so algorithm code (core/) reads like the paper's pseudocode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """Leafwise a + b."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """Leafwise a - b."""
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """Leafwise s * a for scalar s."""
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_mean_leading(a):
+    """Mean over the leading (client) axis of every leaf.
+
+    This is the parameter-averaging round of Local SGD (Alg. 1 line 5):
+    given per-client replicas stacked on axis 0, return the consensus model.
+    """
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def tree_broadcast_leading(a, n: int):
+    """Replicate a pytree along a new leading axis of size n (client replicas)."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), a)
+
+
+def tree_stack_leading(trees):
+    """Stack a list of pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_take(a, i):
+    """Index the leading axis of every leaf (extract client i's replica)."""
+    return jax.tree.map(lambda x: x[i], a)
+
+
+def tree_l2_norm(a):
+    """Global l2 norm across all leaves."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(a))
+    return jnp.sqrt(sq)
+
+
+def tree_l2_dist(a, b):
+    """||a - b|| across all leaves (used for the prox term in Alg. 3)."""
+    return tree_l2_norm(tree_sub(a, b))
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters."""
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(leaves_a) != len(leaves_b):
+        return False
+    import numpy as np
+
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+        for x, y in zip(leaves_a, leaves_b)
+    )

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedules as S
+from repro.data.partition import partition_iid, partition_paper
+from repro.models.attention import _cache_positions
+from repro.utils.tree import (
+    tree_broadcast_leading,
+    tree_mean_leading,
+)
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.floats(1e-4, 0.5), st.integers(1, 1000), st.floats(0.5, 64.0),
+       st.integers(1, 12), st.booleans())
+def test_schedule_invariants(eta1, T1, k1, n_stages, iid):
+    for algo in ("stl_sc", "stl_nc1", "stl_nc2"):
+        stages = S.make_stages(algo, eta1, T1, k1, n_stages, iid)
+        assert len(stages) == n_stages
+        for a, b in zip(stages, stages[1:]):
+            assert b.eta < a.eta or a.eta == b.eta  # non-increasing LR
+            assert b.k_raw >= a.k_raw               # non-decreasing period
+            assert b.T >= a.T
+        assert all(s.k >= 1 for s in stages)
+        # η_s·T_s is constant for geometric schedules (Theorem 2 invariant)
+        if algo in ("stl_sc", "stl_nc1"):
+            prods = [s.eta * s.T for s in stages]
+            assert all(abs(p - prods[0]) < 1e-6 * max(1.0, prods[0]) for p in prods)
+
+
+@given(st.floats(1e-4, 0.2), st.floats(0.5, 10.0), st.integers(1, 256),
+       st.floats(0.1, 5.0), st.floats(0.0, 5.0))
+def test_theory_k1_positive_and_monotone_in_N(eta, L, N, sigma, zeta):
+    k_iid = S.theory_k1(eta, L, N, sigma, zeta, iid=True)
+    k_non = S.theory_k1(eta, L, N, sigma, zeta, iid=False)
+    assert k_iid > 0 and k_non > 0
+    if N > 1:
+        assert S.theory_k1(eta, L, N, sigma, zeta, True) <= \
+            S.theory_k1(eta, L, max(1, N // 2), sigma, zeta, True) + 1e-12
+
+
+@given(st.integers(2, 64), st.integers(0, 100), st.integers(0, 3))
+def test_cache_positions_ring_invariants(C, pos, extra):
+    """After writing token `pos` into slot pos%C, the slot map must (a) place
+    position `pos` at slot pos%C, (b) contain exactly the last min(pos+1, C)
+    positions, (c) mark never-written slots -1."""
+    got = np.asarray(_cache_positions(C, jnp.asarray(pos)))
+    assert got[pos % C] == pos
+    valid = got[got >= 0]
+    expect = np.arange(max(0, pos - C + 1), pos + 1)
+    assert sorted(valid.tolist()) == expect.tolist()
+    assert (got < 0).sum() == max(0, C - (pos + 1))
+
+
+@given(st.integers(8, 200), st.integers(2, 8),
+       st.integers(0, 100).map(lambda s: s % 101))
+def test_partition_paper_invariants(n_per_client, n_clients, iid_pct):
+    n = n_per_client * n_clients
+    rng = np.random.RandomState(0)
+    x = rng.randn(n, 3).astype(np.float32)
+    y = rng.randint(0, 5, n)
+    out = partition_paper(x, y, n_clients, iid_pct, seed=1)
+    assert out["x"].shape[0] == n_clients
+    # equal shares
+    share = out["x"].shape[1]
+    assert share * n_clients <= n
+    # no example reused across clients
+    flat = out["x"].reshape(-1, 3)
+    as_tuples = {tuple(row) for row in np.round(flat, 6).tolist()}
+    assert len(as_tuples) == flat.shape[0]
+
+
+@given(st.integers(1, 6), st.integers(1, 5))
+def test_broadcast_then_mean_roundtrip(n, dim):
+    tree = {"w": jnp.arange(dim, dtype=jnp.float32), "b": jnp.ones((dim, 2))}
+    stacked = tree_broadcast_leading(tree, n)
+    back = tree_mean_leading(stacked)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4))
+def test_comm_rounds_additive(T1, k1, n_stages):
+    stages = S.make_stages("local", 0.1, T1 * 10, float(k1), n_stages, True)
+    r = S.comm_rounds(stages)
+    assert r == sum(math.ceil(s.T / s.k) for s in stages)

@@ -1,0 +1,89 @@
+"""Schedule math vs the paper's Algorithms 2/3 and Table 3."""
+import math
+
+import pytest
+
+from repro.core import schedules as S
+
+
+def test_stl_sc_geometric_progression():
+    st = S.make_stages("stl_sc", eta1=0.4, T1=100, k1=4, n_stages=5, iid=True)
+    for i, stage in enumerate(st):
+        assert stage.eta == pytest.approx(0.4 / 2 ** i)
+        assert stage.T == 100 * 2 ** i
+        assert stage.k_raw == pytest.approx(4 * 2 ** i)
+
+
+def test_stl_sc_noniid_sqrt2_growth():
+    st = S.make_stages("stl_sc", 0.4, 100, 4, 5, iid=False)
+    for a, b in zip(st, st[1:]):
+        assert b.k_raw / a.k_raw == pytest.approx(math.sqrt(2.0))
+
+
+def test_eta_T_product_invariant_sc():
+    # Algorithm 2 keeps η_s·T_s constant (= 6/μ in Theorem 2)
+    st = S.make_stages("stl_sc", 0.32, 64, 2, 7, iid=True)
+    prods = [s.eta * s.T for s in st]
+    assert all(p == pytest.approx(prods[0]) for p in prods)
+
+
+def test_stl_nc2_linear_schedule():
+    st = S.make_stages("stl_nc2", 0.3, 50, 3, 6, iid=True)
+    for i, stage in enumerate(st, start=1):
+        assert stage.eta == pytest.approx(0.3 / i)
+        assert stage.T == 50 * i
+        assert stage.k_raw == pytest.approx(3 * i)
+    st_n = S.make_stages("stl_nc2", 0.3, 50, 3, 6, iid=False)
+    for i, stage in enumerate(st_n, start=1):
+        assert stage.k_raw == pytest.approx(3 * math.sqrt(i))
+
+
+def test_k_floor_at_one():
+    st = S.make_stages("stl_sc", 0.4, 10, 0.3, 3, iid=True)
+    assert all(s.k >= 1 for s in st)
+
+
+def test_theory_k1_formulas():
+    # IID: min(1/(6ηLN), 1/(9ηL)); Non-IID variance-scaled
+    eta, L, N = 0.01, 2.0, 16
+    k_iid = S.theory_k1(eta, L, N, iid=True)
+    assert k_iid == pytest.approx(min(1 / (6 * eta * L * N), 1 / (9 * eta * L)))
+    k_non = S.theory_k1(eta, L, N, sigma=1.0, zeta=0.5, iid=False)
+    assert k_non == pytest.approx(
+        min(1 / math.sqrt(6 * eta * L * N * 3.0), 1 / (9 * eta * L)))
+    # Non-IID admissible period never exceeds IID's O(1/√(ηN)) scaling
+    assert k_non <= S.theory_k1(eta, L, N, sigma=1.0, zeta=0.0, iid=False) + 1e-12
+
+
+def test_k1_inversely_proportional_to_eta():
+    # the paper's key insight: k ∝ 1/η (IID)
+    L, N = 2.0, 8
+    k_a = S.theory_k1(0.01, L, N, iid=True)
+    k_b = S.theory_k1(0.005, L, N, iid=True)
+    assert k_b == pytest.approx(2 * k_a)
+
+
+def test_comm_complexity_orders_match_table3():
+    """Σ T_s/k_s growth matches the claimed orders as T grows."""
+    eta1, T1, k1 = 0.4, 64, 4
+
+    def rounds(algo, n_stages, iid):
+        return S.comm_rounds(S.make_stages(algo, eta1, T1, k1, n_stages, iid))
+
+    # IID stl_sc: rounds = S·T1/k1 → O(log T): linear in stage count
+    r = [rounds("stl_sc", s, True) for s in (4, 8, 12)]
+    assert abs((r[1] - r[0]) - (r[2] - r[1])) <= 2  # arithmetic in S
+
+    # Non-IID stl_sc: rounds ≈ (T1/k1)·(√2)^S geometric → ratio ~√2 per stage
+    r8, r10 = rounds("stl_sc", 8, False), rounds("stl_sc", 10, False)
+    assert r10 / r8 == pytest.approx(2.0, rel=0.15)  # (√2)² per two stages
+
+    # sync: rounds == T
+    st = S.make_stages("sync", eta1, T1, 1, 5, True)
+    assert S.comm_rounds(st) == S.total_iters(st)
+
+
+def test_min_stages_sc():
+    s = S.min_stages_sc(N=32, f_gap0=1.0, eta1=0.1, sigma=1.0)
+    assert s >= 2
+    assert s == math.ceil(math.log2(32 * 1.0 / 0.1)) + 2

@@ -1,0 +1,103 @@
+"""Convergence behaviour of the N-client simulator (the paper's engine).
+
+Small, fast problems only — the full paper-scale comparisons live in
+benchmarks/. These tests pin the qualitative claims: STL-SGD^sc converges to
+the optimum; Local SGD with admissible k matches SyncSGD's accuracy; the prox
+surrogate (Alg. 3) is convex for a weakly-convex objective.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.core import simulate
+from repro.core.prox import prox_loss
+from repro.data import make_binary_classification, partition_iid
+from repro.models import logreg
+
+
+@pytest.fixture(scope="module")
+def problem():
+    x, y = make_binary_classification(n=2048, d=32, seed=0)
+    lam = 1e-2
+    N = 4
+    data = {k: jnp.asarray(v) for k, v in partition_iid(x, y, N, seed=0).items()}
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    loss_fn = lambda p, b: logreg.loss_fn(p, b, lam)
+    eval_fn = jax.jit(lambda p: logreg.full_objective(p, xj, yj, lam))
+    p0 = logreg.init_params(None, 32)
+    # near-exact optimum by GD
+    p = p0
+    g = jax.jit(jax.grad(eval_fn))
+    for _ in range(2000):
+        p = jax.tree.map(lambda a, b: a - 1.0 * b, p, g(p))
+    fstar = float(eval_fn(p))
+    return loss_fn, eval_fn, p0, data, fstar
+
+
+def _run(problem, algo, **kw):
+    loss_fn, eval_fn, p0, data, fstar = problem
+    cfg = TrainConfig(algo=algo, eta1=kw.pop("eta1", 0.5),
+                      T1=kw.pop("T1", 128), k1=kw.pop("k1", 1.0),
+                      n_stages=kw.pop("n_stages", 6), iid=True,
+                      batch_per_client=16, seed=0, **kw)
+    hist = simulate.run(loss_fn, p0, data, cfg, eval_fn, eval_every=8,
+                        max_rounds=kw.get("max_rounds", 3000))
+    return hist, fstar
+
+
+def test_stl_sc_converges(problem):
+    hist, fstar = _run(problem, "stl_sc", k1=2.0, n_stages=7)
+    assert hist[-1].value - fstar < 5e-3
+    assert hist[-1].value < hist[0].value * 0.9
+
+
+def test_local_sgd_matches_sync_accuracy(problem):
+    h_sync, fstar = _run(problem, "sync", n_stages=8)
+    h_local, _ = _run(problem, "local", k1=8.0, n_stages=8)
+    # same iteration budget, local uses ~8x fewer rounds
+    assert h_local[-1].round < h_sync[-1].round / 4
+    assert abs(h_local[-1].value - h_sync[-1].value) < 2e-2
+
+
+def test_crpsgd_runs_and_converges(problem):
+    hist, fstar = _run(problem, "crpsgd", n_stages=6, batch_growth=1.05,
+                       max_batch=64)
+    assert hist[-1].value - fstar < 5e-2
+
+
+def test_prox_loss_strong_convexification():
+    """f(x) = -|x|²/2 is 1-weakly convex; f + (1/2γ)||x−c||² with γ⁻¹=2 is
+    (γ⁻¹−1)-strongly convex → unique minimum, gradient monotone."""
+    base = lambda p, b: -0.5 * jnp.sum(p["w"] ** 2)
+    fn = prox_loss(base, gamma_inv=2.0)
+    c = {"w": jnp.asarray([1.0, -2.0])}
+    g = jax.grad(lambda p: fn(p, None, c))
+    # gradient of (1/2)||x||²(γ⁻¹−1) shifted — check monotonicity along a line
+    p1 = {"w": jnp.asarray([0.0, 0.0])}
+    p2 = {"w": jnp.asarray([1.0, 1.0])}
+    inner = jnp.sum((g(p2)["w"] - g(p1)["w"]) * (p2["w"] - p1["w"]))
+    assert float(inner) > 0.0  # monotone gradient = convex
+
+
+def test_stl_nc_option2_on_nonconvex():
+    """Tiny non-convex problem (2-layer MLP, 2 clients): STL-SGD^nc-2 reduces
+    the loss monotonically across stages."""
+    rng = np.random.RandomState(0)
+    X = jnp.asarray(rng.randn(256, 8).astype(np.float32))
+    Y = jnp.asarray((rng.randn(256) > 0).astype(np.float32))
+    data = {"x": X.reshape(2, 128, 8), "y": Y.reshape(2, 128)}
+
+    def loss_fn(p, b):
+        h = jnp.tanh(b["x"] @ p["w1"])
+        logit = h @ p["w2"]
+        return jnp.mean(jnp.square(logit - b["y"]))
+
+    p0 = {"w1": jnp.asarray(rng.randn(8, 16).astype(np.float32)) * 0.3,
+          "w2": jnp.asarray(rng.randn(16).astype(np.float32)) * 0.3}
+    eval_fn = lambda p: loss_fn(p, {"x": X, "y": Y})
+    cfg = TrainConfig(algo="stl_nc2", eta1=0.2, T1=64, k1=2.0, n_stages=4,
+                      iid=True, gamma_inv=0.5, batch_per_client=32, seed=0)
+    hist = simulate.run(loss_fn, p0, data, cfg, eval_fn, eval_every=16)
+    assert hist[-1].value < hist[0].value * 0.7
