@@ -21,6 +21,8 @@ class AlgoResult:
     iters: int
     wall_s: float
     history: list
+    comm_bytes: int = 0       # modeled bytes (repro.comm) over all rounds run
+    comm_time_s: float = 0.0  # α–β modeled comm wall-clock
 
 
 def run_algo(algo: str, loss_fn, p0, data, eval_fn, fstar: float, *,
@@ -29,19 +31,25 @@ def run_algo(algo: str, loss_fn, p0, data, eval_fn, fstar: float, *,
              lr_alpha: float = 0.0, gamma_inv: float = 0.0,
              momentum: float = 0.0, batch_growth: float = 1.05,
              max_batch: int = 256, seed: int = 0,
-             eval_every: int = 8) -> AlgoResult:
+             eval_every: int = 8, reducer: str = "dense") -> AlgoResult:
     cfg = TrainConfig(algo=algo, eta1=eta1, T1=T1, k1=k1, n_stages=n_stages,
                       iid=iid, batch_per_client=batch, gamma_inv=gamma_inv,
                       momentum=momentum, batch_growth=batch_growth,
-                      max_batch=max_batch, seed=seed)
+                      max_batch=max_batch, seed=seed, reducer=reducer)
     t0 = time.time()
     hist = simulate.run(loss_fn, p0, data, cfg, eval_fn,
                         eval_every=eval_every, max_rounds=max_rounds,
                         target=fstar + target_gap, lr_alpha=lr_alpha)
     wall = time.time() - t0
+    from repro.comm import comm_summary_for
+
+    n_clients = jax.tree.leaves(data)[0].shape[0]
+    summ = comm_summary_for(cfg, p0, n_clients, hist[-1].round)
     return AlgoResult(algo, rounds_to_target(hist, fstar + target_gap),
                       hist[-1].value - fstar, hist[-1].iteration, wall,
-                      [(h.round, h.value) for h in hist])
+                      [(h.round, h.value) for h in hist],
+                      comm_bytes=summ["total_bytes"],
+                      comm_time_s=summ["total_time_s"])
 
 
 def find_fstar(eval_fn, p0, lr: float = 1.0, iters: int = 4000) -> float:
@@ -69,4 +77,24 @@ def save_artifact(name: str, payload, directory: str = "artifacts/convergence"):
     path = os.path.join(directory, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def save_bench(name: str, rows, meta: Optional[Dict] = None,
+               directory: str = "artifacts/bench"):
+    """Write a BENCH_<name>.json perf-trajectory artifact.
+
+    Schema v1: {"bench", "schema", "meta", "rows"} where each row carries the
+    bench's own columns plus (when the run models communication) the
+    repro.comm fields ``comm_bytes`` and ``comm_time_s``. benchmarks/report.py
+    renders these into the comm-cost table.
+    """
+    import json
+    import os
+
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "schema": 1, "meta": meta or {},
+                   "rows": rows}, f, indent=1, default=str)
     return path

@@ -42,6 +42,30 @@ def dryrun_table(art_dir="artifacts/dryrun", pattern="*.json"):
     return "\n".join(lines)
 
 
+def comm_table(art_dir="artifacts/bench", pattern="BENCH_*.json"):
+    """Render the comm-cost columns of the BENCH_*.json perf trajectory.
+
+    Every convergence bench writes a BENCH artifact whose rows carry
+    ``comm_bytes`` / ``comm_time_s`` (modeled by repro.comm's α–β network
+    cost model) alongside the round counts, so the perf trajectory tracks
+    communication cost, not just round counts.
+    """
+    lines = ["| bench | cell | reducer | rounds | comm bytes | comm time |",
+             "|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(art_dir, pattern))):
+        rec = json.load(open(path))
+        for r in rec.get("rows", []):
+            if "comm_bytes" not in r:
+                continue
+            cell = " ".join(str(r[k]) for k in ("dataset", "net", "dist",
+                                                "algo") if k in r)
+            lines.append(
+                f"| {rec['bench']} | {cell} | {r.get('reducer', 'dense')} "
+                f"| {r.get('rounds', '-')} | {_fmt_bytes(r['comm_bytes'])} "
+                f"| {float(r['comm_time_s']):.2f}s |")
+    return "\n".join(lines)
+
+
 def roofline_table(art_dir="artifacts/dryrun", pattern="*singlepod.json"):
     lines = ["| arch | shape | program | compute s | memory s | collective s | "
              "dominant | MODEL_FLOPS | useful ratio | fits 16G | next lever |",
@@ -82,6 +106,8 @@ def main():
     print(roofline_table(pattern="*singlepod.json"))
     print("\n\n### Roofline — multi-pod (2×16×16)\n")
     print(roofline_table(pattern="*multipod.json"))
+    print("\n\n### Communication cost (α–β model, BENCH trajectory)\n")
+    print(comm_table())
 
 
 if __name__ == "__main__":

@@ -37,10 +37,11 @@ def main() -> None:
         print(f"[roofline] skipped: {e}", file=sys.stderr)
 
     if not args.skip_convergence:
-        from benchmarks import table1_convex, table2_nonconvex
+        from benchmarks import table1_convex, table2_nonconvex, table4_comm_cost
 
         table1_convex.run(quick=quick)
         table2_nonconvex.run(quick=quick)
+        table4_comm_cost.run(quick=quick)
 
     print(f"\n[benchmarks] done in {time.time() - t0:.0f}s")
 

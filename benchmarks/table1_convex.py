@@ -76,16 +76,19 @@ def run(quick: bool = True):
                     "algo": algo, "rounds": res.rounds,
                     "speedup_vs_sync": speed,
                     "final_gap": f"{res.final_gap:.2e}",
-                    "iters": res.iters, "wall_s": f"{res.wall_s:.0f}"})
+                    "iters": res.iters, "wall_s": f"{res.wall_s:.0f}",
+                    "comm_bytes": res.comm_bytes,
+                    "comm_time_s": res.comm_time_s})
                 print(f"  {dataset} {'IID' if iid else 'NonIID'} {algo}: "
                       f"rounds={res.rounds} gap={res.final_gap:.2e} "
                       f"({res.wall_s:.0f}s)", flush=True)
     print_table("Table 1 — convex (comm rounds to target gap)", rows,
                 ["dataset", "dist", "algo", "rounds", "speedup_vs_sync",
                  "final_gap", "iters", "wall_s"])
-    from benchmarks.common import save_artifact
+    from benchmarks.common import save_artifact, save_bench
 
     save_artifact("table1_convex", rows)
+    save_bench("table1_convex", rows)
     return rows
 
 

@@ -77,20 +77,27 @@ def run(quick: bool = True):
             reached = simulate.rounds_to_target(hist, target_err)
             if name == "sync":
                 sync_rounds = reached
+            from repro.comm import comm_summary_for
+
+            n_clients = jax.tree.leaves(data)[0].shape[0]
+            summ = comm_summary_for(cfg, p0, n_clients, hist[-1].round)
             rows.append({
                 "net": net, "algo": name, "rounds": reached,
                 "speedup_vs_sync": (f"{sync_rounds / reached:.1f}x"
                                     if reached and sync_rounds else "-"),
                 "final_err": f"{hist[-1].value:.3f}",
-                "iters": hist[-1].iteration, "wall_s": f"{wall:.0f}"})
+                "iters": hist[-1].iteration, "wall_s": f"{wall:.0f}",
+                "comm_bytes": summ["total_bytes"],
+                "comm_time_s": summ["total_time_s"]})
             print(f"  {net} {name}: rounds={reached} err={hist[-1].value:.3f} "
                   f"({wall:.0f}s)", flush=True)
     print_table("Table 2 — non-convex (comm rounds to target train acc)", rows,
                 ["net", "algo", "rounds", "speedup_vs_sync", "final_err",
                  "iters", "wall_s"])
-    from benchmarks.common import save_artifact
+    from benchmarks.common import save_artifact, save_bench
 
     save_artifact("table2_nonconvex", rows)
+    save_bench("table2_nonconvex", rows)
     return rows
 
 

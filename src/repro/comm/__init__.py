@@ -1,0 +1,30 @@
+# Pluggable communication subsystem: how a parameter-averaging round moves
+# bytes. Reducers compress/decompress client messages (with error-feedback
+# residual state); cost.py prices each round with an alpha-beta network model.
+from repro.comm.cost import (
+    NetworkModel,
+    comm_summary,
+    comm_summary_for,
+    round_bytes,
+    round_time,
+)
+from repro.comm.reducer import (
+    DenseMean,
+    QuantizedMean,
+    Reducer,
+    TopKMean,
+    get_reducer,
+)
+
+__all__ = [
+    "DenseMean",
+    "NetworkModel",
+    "QuantizedMean",
+    "Reducer",
+    "TopKMean",
+    "comm_summary",
+    "comm_summary_for",
+    "get_reducer",
+    "round_bytes",
+    "round_time",
+]

@@ -1,0 +1,91 @@
+"""alpha-beta network cost model for communication rounds.
+
+A round costs ``alpha + bytes / bandwidth``: a fixed latency term (link
+setup, stragglers, barrier) plus a serialization term. This is the classic
+LogP-style model; with it every run reports *modeled comm-time* next to the
+comm-round counts of Tables 1-3, so "fewer rounds" (stagewise k_s) and
+"cheaper rounds" (compressed reducers) land in one comparable number.
+
+Byte accounting (star / parameter-server topology, the paper's setting):
+  uplink    = n_clients x reducer.message_bytes(template)   (compressed)
+  downlink  = n_clients x dense model bytes                 (server broadcast)
+Downlink is excluded by default (broadcast is cheap multicast in most
+deployments and identical across reducers); set ``count_downlink=True`` to
+include it.
+
+Defaults model a 1 Gbit/s WAN with 5 ms round latency — override per run
+via TrainConfig.comm_latency_s / comm_bandwidth_gbps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class NetworkModel:
+    latency_s: float = 5e-3          # alpha: fixed per-round cost
+    bandwidth_gbps: float = 1.0      # beta^-1: link bandwidth, Gbit/s
+    count_downlink: bool = False
+
+    @property
+    def bandwidth_Bps(self) -> float:
+        return self.bandwidth_gbps * 1e9 / 8.0
+
+
+def dense_bytes(template) -> int:
+    """Uncompressed payload of one model replica (the downlink broadcast)."""
+    size = lambda l: int(jnp.prod(jnp.asarray(l.shape))) if l.shape else 1
+    return sum(size(l) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(template))
+
+
+def round_bytes(reducer, template, n_clients: int,
+                model: NetworkModel | None = None) -> int:
+    """Modeled bytes moved in one communication round."""
+    model = model or NetworkModel()
+    up = n_clients * reducer.message_bytes(template)
+    if model.count_downlink:
+        up += n_clients * dense_bytes(template)
+    return up
+
+
+def round_time(model: NetworkModel, n_bytes: int) -> float:
+    """alpha-beta cost of one round carrying n_bytes."""
+    return model.latency_s + n_bytes / model.bandwidth_Bps
+
+
+def comm_summary_for(cfg, template, n_clients: int, n_rounds: int) -> dict:
+    """comm_summary resolved from a TrainConfig's reducer/comm_* fields.
+
+    The one place benchmarks and examples turn a finished run's config +
+    round count into the modeled comm report.
+    """
+    from repro.comm.reducer import get_reducer
+
+    return comm_summary(
+        get_reducer(cfg.reducer, quant_bits=cfg.quant_bits,
+                    topk_frac=cfg.topk_frac),
+        template, n_clients, n_rounds,
+        NetworkModel(latency_s=cfg.comm_latency_s,
+                     bandwidth_gbps=cfg.comm_bandwidth_gbps))
+
+
+def comm_summary(reducer, template, n_clients: int, n_rounds: int,
+                 model: NetworkModel | None = None) -> dict:
+    """Full comm-cost report for a finished run."""
+    model = model or NetworkModel()
+    per_round = round_bytes(reducer, template, n_clients, model)
+    t_round = round_time(model, per_round)
+    return {
+        "reducer": reducer.name,
+        "rounds": int(n_rounds),
+        "bytes_per_round": int(per_round),
+        "total_bytes": int(per_round) * int(n_rounds),
+        "round_time_s": t_round,
+        "total_time_s": t_round * int(n_rounds),
+        "latency_s": model.latency_s,
+        "bandwidth_gbps": model.bandwidth_gbps,
+    }

@@ -1,0 +1,236 @@
+"""Reducer protocol — pluggable compression for the communication round.
+
+A *reducer* owns Algorithm 1 line 5 (the parameter average). Compressed
+reducers follow the standard error-feedback template over *round deltas*:
+every client starts the round at the shared consensus ``ref``; after its k
+local steps it uploads
+
+    m_i = C((x_i - ref) + e_i)          (compress delta + carried residual)
+    e_i' = (x_i - ref) + e_i - m_i      (what the compressor dropped)
+
+and the server forms the next consensus ``ref' = ref + mean_i m_i``. Deltas
+have far smaller dynamic range than raw parameters, so the same bit budget
+buys much less distortion, and the residual state e_i makes the scheme
+convergent (EF-SGD-style) even for biased compressors like top-k. This
+composes the paper's axis (fewer rounds, stagewise k_s) with the orthogonal
+axis (cheaper rounds, fewer bytes per round).
+
+All reducers are pure pytree->pytree functions of (stacked replicas,
+state, rng), safe inside jit / lax.scan — state keeps a stable tree
+structure across calls.
+
+Implementations
+  DenseMean     — identity compression; bit-exact with tree_mean_leading.
+  QuantizedMean — int8 (or narrower) symmetric stochastic-rounding delta
+                  quantization per (client, leaf); Pallas-fused kernels in
+                  repro.kernels.quantize (impl="interpret"/"pallas") or the
+                  jnp oracle (impl="xla", default — fastest on CPU).
+  TopKMean      — magnitude top-k delta sparsification per (client, leaf);
+                  messages are (value, index) pairs.
+
+``message_bytes(template)`` reports the compressed uplink payload one client
+sends per round — the quantity comm.cost prices. ``template`` is a
+single-replica pytree (arrays or ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize import ops as Q
+from repro.kernels.quantize import ref as QR
+from repro.utils.tree import tree_mean_leading
+
+_EPS = 1e-12
+
+
+def _leaf_elems(leaf) -> int:
+    size = 1
+    for d in leaf.shape:
+        size *= d
+    return size
+
+
+class Reducer:
+    """Base protocol. Subclasses override reduce() and message_bytes()."""
+
+    name = "base"
+
+    def init_state(self, stacked):
+        """Residual/reference state for the stacked (N, ...) replica tree.
+
+        Call at run start, when all replicas are identical (post-broadcast).
+        """
+        return None
+
+    def reduce(self, stacked, state, rng):
+        """(stacked replicas, state, rng) -> (consensus tree, new state).
+
+        The consensus tree has the leading client axis removed; callers
+        rebroadcast it (tree_broadcast_leading) to continue local training.
+        """
+        raise NotImplementedError
+
+    def message_bytes(self, template) -> int:
+        """Compressed uplink bytes one client sends per round."""
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+@dataclass(frozen=True, repr=False)
+class DenseMean(Reducer):
+    """Uncompressed average — the pre-comm-subsystem behavior, bit-exact."""
+
+    name = "dense"
+
+    def reduce(self, stacked, state, rng):
+        return tree_mean_leading(stacked), state
+
+    def message_bytes(self, template) -> int:
+        return sum(_leaf_elems(l) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(template))
+
+
+class _DeltaReducer(Reducer):
+    """Shared error-feedback-over-deltas machinery for compressed reducers.
+
+    Subclasses implement ``_compress(y, rng) -> (deq, mean)`` on a (N, M)
+    f32 block of per-client deltas: ``deq`` is each client's decompressed
+    message (N, M), ``mean`` its average (M,).
+    """
+
+    error_feedback: bool = True
+
+    def init_state(self, stacked):
+        return {
+            # ref: the shared consensus every client started the round from
+            "ref": jax.tree.map(lambda x: x[0].astype(jnp.float32), stacked),
+            # res: per-client residual the compressor dropped so far
+            "res": jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), stacked),
+        }
+
+    def reduce(self, stacked, state, rng):
+        leaves, treedef = jax.tree.flatten(stacked)
+        refs = treedef.flatten_up_to(state["ref"])
+        res = treedef.flatten_up_to(state["res"])
+        means, new_refs, new_res = [], [], []
+        for i, (x, r, e) in enumerate(zip(leaves, refs, res)):
+            n = x.shape[0]
+            y = (x.astype(jnp.float32).reshape(n, -1)
+                 - r.reshape(1, -1) + e.reshape(n, -1))
+            deq, mean_delta = self._compress(
+                y, jax.random.fold_in(rng, i))
+            consensus = r.reshape(-1) + mean_delta
+            means.append(consensus.reshape(r.shape).astype(x.dtype))
+            new_refs.append(consensus.reshape(r.shape))
+            drop = (y - deq) if self.error_feedback else jnp.zeros_like(y)
+            new_res.append(drop.reshape(e.shape))
+        return (treedef.unflatten(means),
+                {"ref": treedef.unflatten(new_refs),
+                 "res": treedef.unflatten(new_res)})
+
+
+@dataclass(frozen=True, repr=False)
+class QuantizedMean(_DeltaReducer):
+    """Symmetric stochastic-rounding delta quantization with error feedback.
+
+    Per (client, leaf): scale = max|delta|, codes = SR(delta/scale * qmax)
+    in ``bits``-bit signed range (stored int8). Stochastic rounding keeps the
+    quantizer unbiased; the residual carries the lattice error forward.
+    ``error_feedback=False`` gives the naive quantizer (for ablations — it
+    stalls at the quantization noise floor where EF keeps converging).
+    """
+
+    bits: int = 8
+    impl: str = "xla"  # "xla" | "interpret" | "pallas"
+    error_feedback: bool = True
+    # stochastic=False rounds to nearest (u = 0.5 constant): biased, only
+    # safe together with error feedback — used by the EF ablation tests.
+    stochastic: bool = True
+
+    @property
+    def name(self):
+        return f"int{self.bits}" + ("" if self.error_feedback else "-noef")
+
+    def _compress(self, y, rng):
+        n = y.shape[0]
+        qmax = QR.qmax_for(self.bits)
+        scales = jnp.maximum(jnp.max(jnp.abs(y), axis=1), _EPS)
+        if self.stochastic:
+            rbits = jax.random.bits(rng, y.shape, jnp.uint32)
+        else:
+            rbits = jnp.full(y.shape, 1 << 31, jnp.uint32)  # u = 0.5
+        if self.impl == "xla":
+            q = QR.quantize_ref(y, rbits, scales[:, None], bits=self.bits)
+            mean = QR.dequant_mean_ref(q, scales, bits=self.bits)
+        else:
+            q = jnp.stack([
+                Q.quantize(y[j], rbits[j], scales[j], bits=self.bits,
+                           impl=self.impl) for j in range(n)])
+            mean = Q.dequant_mean(q, scales, bits=self.bits, impl=self.impl)
+        deq = q.astype(jnp.float32) * (scales[:, None] / qmax)
+        return deq, mean
+
+    def message_bytes(self, template) -> int:
+        # bits-wide codes (packed) + one f32 scale per leaf
+        return sum(-(-_leaf_elems(l) * self.bits // 8) + 4
+                   for l in jax.tree.leaves(template))
+
+
+@dataclass(frozen=True, repr=False)
+class TopKMean(_DeltaReducer):
+    """Magnitude top-k delta sparsification with error feedback.
+
+    Per (client, leaf): keep the k = max(1, round(frac * size)) largest-
+    magnitude delta entries; the rest accumulate into the residual.
+    Messages are (f32 value, i32 index) pairs.
+    """
+
+    frac: float = 0.1
+    error_feedback: bool = True
+
+    @property
+    def name(self):
+        return f"top{self.frac:g}" + ("" if self.error_feedback else "-noef")
+
+    def _k(self, size: int) -> int:
+        return max(1, min(size, int(round(self.frac * size))))
+
+    def _compress(self, y, rng):
+        n = y.shape[0]
+        k = self._k(y.shape[1])
+        _, idx = jax.lax.top_k(jnp.abs(y), k)
+        vals = jnp.take_along_axis(y, idx, axis=1)
+        deq = jnp.zeros_like(y).at[jnp.arange(n)[:, None], idx].set(vals)
+        return deq, jnp.sum(deq, axis=0) * (1.0 / n)
+
+    def message_bytes(self, template) -> int:
+        # (f32 value + i32 index) per kept entry
+        return sum(8 * self._k(_leaf_elems(l))
+                   for l in jax.tree.leaves(template))
+
+
+def get_reducer(spec, *, quant_bits: int = 8, topk_frac: float = 0.1,
+                impl: str = "xla") -> Reducer:
+    """Resolve a reducer from a config string (or pass a Reducer through).
+
+    Accepted specs: "dense" | "int8" / "quant" (quant_bits-wide) |
+    "int<b>" (explicit width) | "topk" (topk_frac).
+    """
+    if isinstance(spec, Reducer):
+        return spec
+    if spec in (None, "dense", "mean"):
+        return DenseMean()
+    if spec in ("quant", "int8", "quantized"):
+        b = 8 if spec == "int8" else quant_bits
+        return QuantizedMean(bits=b, impl=impl)
+    if spec.startswith("int"):
+        return QuantizedMean(bits=int(spec[3:]), impl=impl)
+    if spec == "topk":
+        return TopKMean(frac=topk_frac)
+    raise ValueError(f"unknown reducer spec: {spec!r}")

@@ -135,3 +135,11 @@ class TrainConfig:
     batch_growth: float = 1.1  # CR-PSGD ρ
     max_batch: int = 512
     seed: int = 0
+    # communication round (repro.comm): reducer spec + α–β network model.
+    # "dense" is bit-exact Alg. 1; "int8"/"int<b>" = stochastic-rounding
+    # quantization (quant_bits wide for "quant"), "topk" = magnitude top-k.
+    reducer: str = "dense"
+    quant_bits: int = 8          # width for reducer="quant"/"int<b>"
+    topk_frac: float = 0.1       # kept fraction for reducer="topk"
+    comm_latency_s: float = 5e-3      # α: fixed per-round latency
+    comm_bandwidth_gbps: float = 1.0  # β⁻¹: link bandwidth

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm import get_reducer
+from repro.comm.reducer import DenseMean
 from repro.configs.base import ArchConfig
 from repro.models import transformer as TF
 from repro.optim import make_optimizer
@@ -72,18 +74,60 @@ def batch_spec(cfg: ArchConfig, client_axis: Optional[str], extra_data_axis: boo
     return spec
 
 
+def build_sync_step(reducer=None, *, base_seed: int = 0):
+    """Reducer-aware Algorithm 1 line 5: the parameter-averaging round.
+
+    Returns ``sync_step(state) -> state``. With the default DenseMean this is
+    exactly the historical dense average (and leaves the state tree
+    untouched). With a compressed reducer, each client's message is
+    compressed with error feedback; the residual state rides in
+    ``state["comm"]`` (created on first sync), and the reducer rng derives
+    from ``state["step"]`` so the step stays a pure jittable function.
+    Optimizer moments are always dense-averaged — they never cross the
+    network in a real deployment (the average mirrors Alg. 1's replica
+    consensus, not a transmitted payload).
+    """
+    reducer = get_reducer(reducer)
+    dense = isinstance(reducer, DenseMean)
+
+    def sync_step(state):
+        n = jax.tree.leaves(state["params"])[0].shape[0]
+        opt = tree_broadcast_leading(tree_mean_leading(state["opt"]), n)
+        if dense:
+            params = tree_broadcast_leading(
+                tree_mean_leading(state["params"]), n)
+            out = dict(state, params=params, opt=opt)
+        else:
+            comm = state.get("comm")
+            if comm is None:
+                comm = reducer.init_state(state["params"])
+            rng = jax.random.fold_in(jax.random.key(base_seed), state["step"])
+            consensus, comm = reducer.reduce(state["params"], comm, rng)
+            out = dict(state, params=tree_broadcast_leading(consensus, n),
+                       opt=opt, comm=comm)
+        return out
+
+    # tag the step with its reducer so StagewiseDriver's comm accounting
+    # can't drift from what the round actually transmits
+    sync_step.reducer = reducer
+    return sync_step
+
+
 def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
                       optimizer: str = "sgd", momentum: float = 0.0,
                       weight_decay: float = 0.0,
                       loss_fn: Optional[Callable] = None,
                       microbatch: int = 1,
                       sync_grads: bool = False,
+                      reducer=None,
                       donate: bool = True):
     """Returns (train_step_local, sync_step, specs) for the given mesh.
 
     train_step_local(state, batch, eta) -> (state, metrics)
         state = {"params": (C, ...), "opt": (C, ...), "step": scalar}
-    sync_step(state) -> state   (client-axis parameter average)
+    sync_step(state) -> state   (client-axis parameter average; built by
+        ``build_sync_step(reducer)`` — pass ``reducer`` for a compressed
+        round, default dense)
 
     ``microbatch`` > 1 splits each client's batch into that many
     gradient-accumulation slices (scan), dividing activation memory.
@@ -140,14 +184,12 @@ def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
 
     def train_step_local(state, batch, eta):
         params, opt, loss = vstep(state["params"], state["opt"], batch, eta)
-        return {"params": params, "opt": opt, "step": state["step"] + 1}, {
+        # dict(state, ...) so extra keys (e.g. a compressed sync_step's
+        # "comm" error-feedback residuals) survive the local step.
+        return dict(state, params=params, opt=opt, step=state["step"] + 1), {
             "loss": jnp.mean(loss)}
 
-    def sync_step(state):
-        n = jax.tree.leaves(state["params"])[0].shape[0]
-        params = tree_broadcast_leading(tree_mean_leading(state["params"]), n)
-        opt = tree_broadcast_leading(tree_mean_leading(state["opt"]), n)
-        return {"params": params, "opt": opt, "step": state["step"]}
+    sync_step = build_sync_step(reducer)
 
     return train_step_local, sync_step, per_client_step
 

@@ -3,7 +3,9 @@
 This is the engine behind the paper-fidelity convergence experiments
 (Figures 1–4, Tables 1–2): N client replicas live on a stacked leading axis,
 local steps are vmapped (no communication), and a communication round is a
-mean over the leading axis — bit-exact Algorithm 1 semantics.
+``repro.comm`` reducer over the leading axis — DenseMean by default, which
+is bit-exact Algorithm 1 semantics; compressed reducers (QuantizedMean,
+TopKMean) trade per-round bytes for quantization noise with error feedback.
 
 The same `Stage` objects drive this simulator and the distributed trainer
 (core/local_sgd.py), so the convergence experiments validate exactly the
@@ -27,10 +29,17 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import get_reducer
+from repro.comm.reducer import Reducer
 from repro.configs.base import TrainConfig
 from repro.core import schedules as sched
 from repro.core.prox import prox_loss
 from repro.utils.tree import tree_broadcast_leading, tree_mean_leading, tree_zeros_like
+
+# fold_in salt deriving the reducer's rng from the round rng without
+# consuming it — keeps the local-step rng stream (and thus the DenseMean
+# trajectory) bit-identical to the pre-comm-subsystem dense path.
+_COMM_SALT = 0x5EED
 
 
 @dataclass
@@ -48,13 +57,20 @@ def _sample_batch(data, rng, batch: int):
 
 
 def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
-                  lr_alpha: float, grow: float, b0: int, max_batch: int):
-    """One communication round = k vmapped local steps + 1 parameter average.
+                  lr_alpha: float, grow: float, b0: int, max_batch: int,
+                  reducer: Optional[Reducer] = None):
+    """One communication round = k vmapped local steps + 1 reduced average.
 
     Returned fn: (carry, rng, data, center, eta) -> carry where
-    carry = (params_stacked, momentum_stacked, t_global_f32).
+    carry = (params_stacked, momentum_stacked, t_global_f32, comm_state).
     loss_fn(params, batch, center, weights) -> scalar.
+
+    ``reducer`` (default DenseMean) owns the parameter average; its
+    residual/error-feedback state rides in the carry. Momentum is always
+    dense-averaged: it never leaves the client in a real deployment, the
+    average only mirrors Alg. 1's replica-consensus bookkeeping.
     """
+    reducer = reducer if reducer is not None else get_reducer(None)
 
     def batch_weights(t):
         if grow <= 1.0:
@@ -83,11 +99,14 @@ def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
             params, mom = jax.vmap(client)(params, mom, data, rngs)
             return (params, mom, t + 1.0), None
 
-        carry, _ = jax.lax.scan(local_step, carry, jax.random.split(rng_r, k))
-        params, mom, t = carry
-        params = tree_broadcast_leading(tree_mean_leading(params), N)
+        params, mom, t, comm = carry
+        (params, mom, t), _ = jax.lax.scan(
+            local_step, (params, mom, t), jax.random.split(rng_r, k))
+        consensus, comm = reducer.reduce(
+            params, comm, jax.random.fold_in(rng_r, _COMM_SALT))
+        params = tree_broadcast_leading(consensus, N)
         mom = tree_broadcast_leading(tree_mean_leading(mom), N)
-        return (params, mom, t)
+        return (params, mom, t, comm)
 
     return round_fn
 
@@ -95,7 +114,7 @@ def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
 def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
         eval_fn: Callable, *, eval_every: int = 1, max_rounds: Optional[int] = None,
         target: Optional[float] = None, lr_alpha: float = 0.0,
-        chunk_rounds: int = 32) -> List[Record]:
+        chunk_rounds: int = 32, reducer=None) -> List[Record]:
     """Run ``cfg.algo`` and return the (comm-round, objective) trace.
 
     loss_fn(params, batch) -> scalar (per-client minibatch loss).
@@ -103,9 +122,14 @@ def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
     eval_fn(params) -> scalar on the *averaged* model.
     ``chunk_rounds`` communication rounds are scanned inside one jit call
     (with per-round eval), so the Python loop runs ~chunk_rounds× less often.
+    ``reducer`` — a comm.Reducer or spec string for the communication round;
+    defaults to ``cfg.reducer`` (DenseMean unless configured otherwise),
+    which is bit-exact with the historical dense path.
     """
     N = jax.tree.leaves(client_data)[0].shape[0]
     algo = cfg.algo
+    reducer = get_reducer(reducer if reducer is not None else cfg.reducer,
+                          quant_bits=cfg.quant_bits, topk_frac=cfg.topk_frac)
     use_prox = algo in ("stl_nc1", "stl_nc2") and cfg.gamma_inv > 0.0
     ploss = prox_loss(loss_fn, cfg.gamma_inv if use_prox else 0.0)
 
@@ -122,6 +146,7 @@ def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
 
     params = tree_broadcast_leading(init_params, N)
     mom = tree_zeros_like(params)
+    comm_state = reducer.init_state(params)  # residuals persist across stages
     rng = jax.random.key(cfg.seed)
     history: List[Record] = [Record(0, 0, float(eval_fn(init_params)))]
     rounds_done = 0
@@ -138,8 +163,11 @@ def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
             k, b = stage.k, cfg.batch_per_client
         round_fn = make_round_fn(
             wloss, k=k, batch=b, momentum=cfg.momentum, lr_alpha=lr_alpha,
-            grow=grow, b0=cfg.batch_per_client, max_batch=cfg.max_batch)
-        center = tree_mean_leading(params) if use_prox else init_params  # unused w/o prox
+            grow=grow, b0=cfg.batch_per_client, max_batch=cfg.max_batch,
+            reducer=reducer)
+        # Non-prox algorithms have no center: pass None (an empty pytree) so
+        # nothing downstream can silently consume a stale parameter snapshot.
+        center = tree_mean_leading(params) if use_prox else None
 
         @partial(jax.jit, static_argnames=("n",))
         def chunk_fn(carry, rng_c, data, ctr, eta, n):
@@ -149,7 +177,7 @@ def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
             return jax.lax.scan(body, carry, jax.random.split(rng_c, n))
 
         n_rounds = -(-stage.T // k)  # ceil
-        carry = (params, mom, jnp.asarray(t_global, jnp.float32))
+        carry = (params, mom, jnp.asarray(t_global, jnp.float32), comm_state)
         done_in_stage = 0
         while done_in_stage < n_rounds:
             n = min(chunk_rounds, n_rounds - done_in_stage)
@@ -171,7 +199,7 @@ def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
                 return history
             if max_rounds is not None and rounds_done >= max_rounds:
                 return history
-        params, mom, tg = carry
+        params, mom, tg, comm_state = carry
         t_global = float(tg)
 
     return history

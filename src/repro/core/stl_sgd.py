@@ -16,6 +16,7 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import NetworkModel, get_reducer, round_bytes, round_time
 from repro.configs.base import TrainConfig
 from repro.core import schedules as sched
 from repro.utils.tree import tree_mean_leading
@@ -41,6 +42,8 @@ class DriverState:
     results: List[StageResult] = field(default_factory=list)
     rounds_total: int = 0
     iters_total: int = 0
+    comm_bytes_total: int = 0      # modeled bytes moved by sync rounds
+    comm_time_s: float = 0.0       # α–β modeled wall-clock of those rounds
 
 
 class StagewiseDriver:
@@ -51,17 +54,38 @@ class StagewiseDriver:
     """
 
     def __init__(self, tcfg: TrainConfig, train_step: Callable,
-                 sync_step: Callable, uses_center: bool = False):
+                 sync_step: Callable, uses_center: bool = False,
+                 reducer=None):
         self.tcfg = tcfg
         self.train_step = train_step
         self.sync_step = sync_step
         self.uses_center = uses_center
+        # Comm accounting reducer, in priority order: explicit arg > the
+        # reducer the sync_step itself was built with (local_sgd.
+        # build_sync_step tags it, surviving jax.jit via __wrapped__) >
+        # tcfg.reducer. The tag keeps accounting from silently diverging
+        # from what the round actually transmits.
+        if reducer is None:
+            reducer = getattr(sync_step, "reducer", None) or getattr(
+                getattr(sync_step, "__wrapped__", None), "reducer", None)
+        self.reducer = get_reducer(
+            reducer if reducer is not None else tcfg.reducer,
+            quant_bits=tcfg.quant_bits, topk_frac=tcfg.topk_frac)
+        self.net = NetworkModel(latency_s=tcfg.comm_latency_s,
+                                bandwidth_gbps=tcfg.comm_bandwidth_gbps)
         self.stages = sched.make_stages(
             tcfg.algo, tcfg.eta1, tcfg.T1, tcfg.k1, tcfg.n_stages, tcfg.iid)
 
     def run(self, state: dict, batches, max_iters: Optional[int] = None
             ) -> DriverState:
         ds = DriverState(state=state)
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            state["params"])
+        n_clients = jax.tree.leaves(state["params"])[0].shape[0]
+        bytes_per_round = round_bytes(self.reducer, template, n_clients,
+                                      self.net)
+        time_per_round = round_time(self.net, bytes_per_round)
         it = iter(batches)
         for stage in self.stages:
             if self.uses_center:
@@ -86,6 +110,8 @@ class StagewiseDriver:
                 ds.state = self.sync_step(ds.state)
                 rounds += 1
                 ds.rounds_total += 1
+                ds.comm_bytes_total += bytes_per_round
+                ds.comm_time_s += time_per_round
                 if max_iters and ds.iters_total >= max_iters:
                     break
             res = StageResult(stage.s, stage.eta, stage.k, done, rounds,
@@ -95,4 +121,7 @@ class StagewiseDriver:
                      res.stage, res.eta, res.k, res.iters, res.rounds, res.mean_loss)
             if max_iters and ds.iters_total >= max_iters:
                 break
+        log.info("comm: reducer=%s rounds=%d bytes=%.3e modeled_time=%.3fs",
+                 self.reducer.name, ds.rounds_total, ds.comm_bytes_total,
+                 ds.comm_time_s)
         return ds

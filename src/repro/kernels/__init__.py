@@ -3,6 +3,8 @@
 # schedule — kernel-free — so kernels/ serves the substrate):
 #   flash_attention/  blockwise online-softmax attention (causal/window/softcap/GQA)
 #   fused_update/     fused momentum-SGD update (Local SGD's k-per-round inner loop)
+#   quantize/         fused stochastic-round quantize + dequant-accumulate
+#                     (the compressed communication round, repro.comm)
 #   ssd/              Mamba2 SSD chunked scan in matmul-dual (MXU) form
 # Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (public
 # jit-able wrapper), ref.py (pure-jnp oracle used by the allclose tests).

@@ -1,0 +1,8 @@
+from repro.kernels.quantize.ops import (
+    compute_scale,
+    dequant_mean,
+    qmax_for,
+    quantize,
+)
+
+__all__ = ["compute_scale", "dequant_mean", "qmax_for", "quantize"]

@@ -1,0 +1,36 @@
+"""Jit'd wrappers for the quantize kernels + leaf-level API.
+
+``impl`` follows the fused_update convention:
+  "xla"       — pure-jnp oracle (fast on CPU, used inside the simulator)
+  "interpret" — Pallas kernel, interpreter mode (CI / CPU parity)
+  "pallas"    — Pallas kernel, compiled (TPU)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.quantize import ref as R
+from repro.kernels.quantize.kernel import dequant_mean_kernel, quantize_kernel
+
+qmax_for = R.qmax_for
+
+
+def compute_scale(x, *, eps: float = 1e-12):
+    """Symmetric per-tensor scale: max|x|, floored away from zero."""
+    return jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), eps)
+
+
+def quantize(x, rand_bits, scale, *, bits: int = 8, impl: str = "xla"):
+    """Stochastic-rounding quantize one leaf to int8 codes."""
+    if impl == "xla":
+        return R.quantize_ref(x, rand_bits, scale, bits=bits)
+    return quantize_kernel(x, rand_bits, scale, bits=bits,
+                           interpret=impl == "interpret")
+
+
+def dequant_mean(q, scales, *, bits: int = 8, impl: str = "xla"):
+    """Fused dequantize + average of N stacked client messages."""
+    if impl == "xla":
+        return R.dequant_mean_ref(q, scales, bits=bits)
+    return dequant_mean_kernel(q, scales, bits=bits,
+                               interpret=impl == "interpret")

@@ -9,21 +9,39 @@ jax import, everything else sees the real 1-CPU topology.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` (and the AxisType
+    enum itself) only exist on newer releases; older ones are Auto-only."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def mesh_context(mesh):
+    """``jax.sharding.set_mesh(mesh)`` where available, else the classic
+    ``with mesh:`` context (pre-0.5 jax has no set_mesh)."""
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return contextlib.nullcontext(mesh) if mesh is None else mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU runs)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 # v5e hardware constants for the roofline (per chip / per link)

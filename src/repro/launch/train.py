@@ -73,6 +73,8 @@ def main(argv=None):
     ap.add_argument("--gamma-inv", type=float, default=0.0)
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--reducer", default="dense",
+                    help="communication reducer: dense | int8 | int<b> | topk")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -81,7 +83,7 @@ def main(argv=None):
     tcfg = TrainConfig(algo=args.algo, eta1=args.eta1, k1=args.k1, T1=args.T1,
                        n_stages=args.stages, iid=not args.non_iid,
                        gamma_inv=args.gamma_inv, momentum=args.momentum,
-                       seed=args.seed)
+                       seed=args.seed, reducer=args.reducer)
     mesh = make_host_mesh(1, 1)
     C = args.clients
 
@@ -89,7 +91,7 @@ def main(argv=None):
     state = LS.init_state(jax.random.key(args.seed), cfg, C, args.optimizer)
     train_local, sync_step, _ = LS.build_train_steps(
         cfg, mesh, client_axis="data", optimizer=args.optimizer,
-        momentum=args.momentum)
+        momentum=args.momentum, reducer=args.reducer)
 
     uses_center = args.algo in ("stl_nc1", "stl_nc2") and args.gamma_inv > 0
     if uses_center:

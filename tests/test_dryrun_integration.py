@@ -18,13 +18,13 @@ from repro.configs import get_arch, SHAPES
 from repro.core import local_sgd as LS
 from repro.launch import specs as SP
 from repro.launch import hlo_analysis as H
+from repro.launch.mesh import _make_mesh, mesh_context
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = _make_mesh((2, 4), ("data", "model"))
 cfg = get_arch("@ARCH@", smoke=True)
 shape = dataclasses.replace(SHAPES["train_4k"], seq_len=128, global_batch=8)
 state, batch, st_sh, b_sh, ca = SP.train_specs(cfg, shape, mesh)
-with jax.sharding.set_mesh(mesh):
+with mesh_context(mesh):
     local_step, sync_step, _ = LS.build_train_steps(cfg, mesh, client_axis=ca,
                                                     microbatch=2)
     cl = jax.jit(local_step, in_shardings=(st_sh, b_sh, None),
