@@ -52,6 +52,26 @@ def run_algo(algo: str, loss_fn, p0, data, eval_fn, fstar: float, *,
                       comm_time_s=summ["total_time_s"])
 
 
+def parse_reducers(argv) -> tuple:
+    """Parse a ``--reducer dense,int8,topk`` sweep axis from a CLI argv."""
+    value = None
+    for i, a in enumerate(argv):
+        if a == "--reducer":
+            if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+                raise SystemExit("--reducer needs a value, e.g. "
+                                 "--reducer dense,int8,topk")
+            value = argv[i + 1]
+        elif a.startswith("--reducer="):
+            value = a.split("=", 1)[1]
+    if value is None:
+        return ("dense",)
+    reducers = tuple(r for r in value.split(",") if r)
+    if not reducers:
+        raise SystemExit("--reducer needs a value, e.g. "
+                         "--reducer dense,int8,topk")
+    return reducers
+
+
 def find_fstar(eval_fn, p0, lr: float = 1.0, iters: int = 4000) -> float:
     """Near-exact optimum by full-batch GD (convex problems)."""
     p = p0

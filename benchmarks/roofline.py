@@ -8,6 +8,11 @@ Per (arch × shape × mesh) cell:
 plus the dominant term, MODEL_FLOPS = 6·N_active·D, the useful-compute ratio,
 and — for train cells — the STL-SGD amortized communication at stage s
 (sync bytes / k_s) vs the SyncSGD per-step gradient all-reduce.
+
+Collective terms are priced with the calibrated α–β link models from
+``repro.comm.link_model`` (bandwidths tied to the ICI_BW/DCN_BW constants
+in launch/mesh.py, so the per-hop latency term shows up in the tables
+instead of a bare bytes/bandwidth ratio).
 """
 from __future__ import annotations
 
@@ -17,11 +22,10 @@ import math
 import os
 from typing import Optional
 
+from repro.comm import link_model
 from repro.configs import SHAPES, arch_for_shape
 from repro.launch.flops import shape_flops
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
-
-DCN_BW = 6.25e9  # inter-pod (data-center network) B/s per host link, v5e-ish
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
 
 def analyse_cell(path: str) -> Optional[dict]:
@@ -52,10 +56,11 @@ def analyse_cell(path: str) -> Optional[dict]:
     by_axes = coll.get("by_axes", {})
     # HLO shapes are per-device after SPMD partitioning, so parsed collective
     # bytes are already per-device link traffic — no division by chip count.
+    # α–β per hop: inter-pod traffic crosses the DCN, the rest stays on ICI.
+    ici_net, dcn_net = link_model("ici"), link_model("dcn")
     t_coll = 0.0
     for axes, b in by_axes.items():
-        bw = DCN_BW if "pod" in axes else ICI_BW
-        t_coll += b / bw
+        t_coll += (dcn_net if "pod" in axes else ici_net).time(b)
 
     hlo_flops = main["cost"].get("flops") or 0.0
     terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
@@ -78,7 +83,9 @@ def analyse_cell(path: str) -> Optional[dict]:
         "fits_16g": "Y" if (main["memory"].get("peak_bytes") or 0) < 16e9 else "N",
     }
 
-    # STL-SGD vs SyncSGD communication story (train cells)
+    # STL-SGD vs SyncSGD communication story (train cells): amortized α–β
+    # comm time per local step — the sync round's (latency + serialization)
+    # is paid once every k steps, so both α and β amortize with k_s.
     if "sync_step" in programs and "syncsgd_step" in programs:
         sync_b = programs["sync_step"]["collectives"]["total_link_bytes"]
         ssgd = programs["syncsgd_step"]["collectives"]["by_axes"]
@@ -89,9 +96,10 @@ def analyse_cell(path: str) -> Optional[dict]:
         out["syncsgd_client_bytes_per_step"] = f"{ssgd_client:.3e}"
         out["stl_sync_bytes_per_round"] = f"{sync_b:.3e}"
         for k in (1, 8, 64):
-            amort = (local_client + sync_b / k) / ICI_BW
+            amort = local_client / ici_net.bandwidth_Bps \
+                + ici_net.time(sync_b) / k
             out[f"stl_comm_s_k{k}"] = f"{amort:.3e}"
-        out["syncsgd_comm_s"] = f"{ssgd_client / ICI_BW:.3e}"
+        out["syncsgd_comm_s"] = f"{ici_net.time(ssgd_client):.3e}"
     return out
 
 

@@ -6,6 +6,14 @@ Datasets are synthetic stand-ins with a9a/MNIST-like dimensions (offline
 container), the protocol (partitioner s=50%, λ=1/n, tuned η/k/B per
 algorithm) follows §5.1. The claim under test: STL-SGD^sc needs the fewest
 rounds, with the ordering SyncSGD ≫ LB/CR-PSGD ≫ Local SGD > STL-SGD^sc.
+
+``--reducer`` adds a compressed-round axis (table4's sweep pattern at paper
+protocol scale): each named reducer reruns the full protocol and the rows
+carry modeled comm_bytes/comm_time_s, so "fewer rounds" × "cheaper rounds"
+lands in one table.
+
+    PYTHONPATH=src python -m benchmarks.table1_convex [--full] \
+        [--reducer dense,int8,topk]
 """
 from __future__ import annotations
 
@@ -38,7 +46,7 @@ def make_problem(dataset: str, iid: bool, n_clients: int, quick: bool):
     return loss_fn, eval_fn, p0, data
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, reducers=("dense",)):
     n_clients = 8 if quick else 32
     target_gap = 1e-4
     max_rounds = 12000 if quick else 40000
@@ -64,35 +72,40 @@ def run(quick: bool = True):
                                n_stages=24)),
                 ("stl_sc", dict(eta1=0.5, T1=512, k1=k_loc, n_stages=11)),
             ]
-            sync_rounds = None
-            for algo, kw in runs:
-                res = run_algo(algo, **{**base, **kw})
-                if algo == "sync":
-                    sync_rounds = res.rounds
-                speed = (f"{sync_rounds / res.rounds:.1f}x"
-                         if res.rounds and sync_rounds else "-")
-                rows.append({
-                    "dataset": dataset, "dist": "IID" if iid else "Non-IID",
-                    "algo": algo, "rounds": res.rounds,
-                    "speedup_vs_sync": speed,
-                    "final_gap": f"{res.final_gap:.2e}",
-                    "iters": res.iters, "wall_s": f"{res.wall_s:.0f}",
-                    "comm_bytes": res.comm_bytes,
-                    "comm_time_s": res.comm_time_s})
-                print(f"  {dataset} {'IID' if iid else 'NonIID'} {algo}: "
-                      f"rounds={res.rounds} gap={res.final_gap:.2e} "
-                      f"({res.wall_s:.0f}s)", flush=True)
+            for reducer in reducers:
+                sync_rounds = None
+                for algo, kw in runs:
+                    res = run_algo(algo, reducer=reducer, **{**base, **kw})
+                    if algo == "sync":
+                        sync_rounds = res.rounds
+                    speed = (f"{sync_rounds / res.rounds:.1f}x"
+                             if res.rounds and sync_rounds else "-")
+                    rows.append({
+                        "dataset": dataset, "dist": "IID" if iid else "Non-IID",
+                        "algo": algo, "reducer": reducer, "rounds": res.rounds,
+                        "speedup_vs_sync": speed,
+                        "final_gap": f"{res.final_gap:.2e}",
+                        "iters": res.iters, "wall_s": f"{res.wall_s:.0f}",
+                        "comm_bytes": res.comm_bytes,
+                        "comm_time_s": res.comm_time_s})
+                    print(f"  {dataset} {'IID' if iid else 'NonIID'} {algo} "
+                          f"[{reducer}]: rounds={res.rounds} "
+                          f"gap={res.final_gap:.2e} ({res.wall_s:.0f}s)",
+                          flush=True)
     print_table("Table 1 — convex (comm rounds to target gap)", rows,
-                ["dataset", "dist", "algo", "rounds", "speedup_vs_sync",
-                 "final_gap", "iters", "wall_s"])
+                ["dataset", "dist", "algo", "reducer", "rounds",
+                 "speedup_vs_sync", "final_gap", "iters", "wall_s",
+                 "comm_bytes", "comm_time_s"])
     from benchmarks.common import save_artifact, save_bench
 
     save_artifact("table1_convex", rows)
-    save_bench("table1_convex", rows)
+    save_bench("table1_convex", rows, meta={"reducers": list(reducers)})
     return rows
 
 
 if __name__ == "__main__":
     import sys
 
-    run(quick="--full" not in sys.argv)
+    from benchmarks.common import parse_reducers
+
+    run(quick="--full" not in sys.argv, reducers=parse_reducers(sys.argv))

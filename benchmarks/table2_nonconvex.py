@@ -6,6 +6,13 @@ SGD / STL-SGD^nc-1 / STL-SGD^nc-2. (LB-SGD/CR-PSGD omitted in quick mode —
 the paper itself reports '-' for them on VGG16.) Claim under test: the
 STL-SGD^nc variants reach the target in the fewest rounds, with ^nc-1
 (geometric) ahead of ^nc-2 (linear).
+
+``--reducer`` adds a compressed-round axis (table4's sweep pattern): each
+named reducer reruns the protocol, rows carry modeled comm_bytes /
+comm_time_s.
+
+    PYTHONPATH=src python -m benchmarks.table2_nonconvex [--full] \
+        [--reducer dense,int8,topk]
 """
 from __future__ import annotations
 
@@ -49,7 +56,7 @@ def make_problem(net: str, quick: bool):
     return loss_fn, err_fn, params, data
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, reducers=("dense",)):
     rows = []
     target_err = 0.02 if quick else 0.05
     max_rounds = 400 if quick else 4000
@@ -65,43 +72,47 @@ def run(quick: bool = True):
             ("stl_nc1", dict(algo="stl_nc1", eta1=0.005, T1=T1, k1=8.0,
                              n_stages=8, gamma_inv=0.01)),
         ]
-        sync_rounds = None
-        for name, kw in runs:
-            cfg = TrainConfig(iid=False, batch_per_client=16, momentum=0.9,
-                              seed=0, **kw)
-            t0 = time.time()
-            hist = simulate.run(loss_fn, p0, data, cfg, err_fn, eval_every=4,
-                                max_rounds=max_rounds, target=target_err,
-                                chunk_rounds=8)
-            wall = time.time() - t0
-            reached = simulate.rounds_to_target(hist, target_err)
-            if name == "sync":
-                sync_rounds = reached
-            from repro.comm import comm_summary_for
+        for reducer in reducers:
+            sync_rounds = None
+            for name, kw in runs:
+                cfg = TrainConfig(iid=False, batch_per_client=16, momentum=0.9,
+                                  seed=0, reducer=reducer, **kw)
+                t0 = time.time()
+                hist = simulate.run(loss_fn, p0, data, cfg, err_fn, eval_every=4,
+                                    max_rounds=max_rounds, target=target_err,
+                                    chunk_rounds=8)
+                wall = time.time() - t0
+                reached = simulate.rounds_to_target(hist, target_err)
+                if name == "sync":
+                    sync_rounds = reached
+                from repro.comm import comm_summary_for
 
-            n_clients = jax.tree.leaves(data)[0].shape[0]
-            summ = comm_summary_for(cfg, p0, n_clients, hist[-1].round)
-            rows.append({
-                "net": net, "algo": name, "rounds": reached,
-                "speedup_vs_sync": (f"{sync_rounds / reached:.1f}x"
-                                    if reached and sync_rounds else "-"),
-                "final_err": f"{hist[-1].value:.3f}",
-                "iters": hist[-1].iteration, "wall_s": f"{wall:.0f}",
-                "comm_bytes": summ["total_bytes"],
-                "comm_time_s": summ["total_time_s"]})
-            print(f"  {net} {name}: rounds={reached} err={hist[-1].value:.3f} "
-                  f"({wall:.0f}s)", flush=True)
+                n_clients = jax.tree.leaves(data)[0].shape[0]
+                summ = comm_summary_for(cfg, p0, n_clients, hist[-1].round)
+                rows.append({
+                    "net": net, "algo": name, "reducer": reducer,
+                    "rounds": reached,
+                    "speedup_vs_sync": (f"{sync_rounds / reached:.1f}x"
+                                        if reached and sync_rounds else "-"),
+                    "final_err": f"{hist[-1].value:.3f}",
+                    "iters": hist[-1].iteration, "wall_s": f"{wall:.0f}",
+                    "comm_bytes": summ["total_bytes"],
+                    "comm_time_s": summ["total_time_s"]})
+                print(f"  {net} {name} [{reducer}]: rounds={reached} "
+                      f"err={hist[-1].value:.3f} ({wall:.0f}s)", flush=True)
     print_table("Table 2 — non-convex (comm rounds to target train acc)", rows,
-                ["net", "algo", "rounds", "speedup_vs_sync", "final_err",
-                 "iters", "wall_s"])
+                ["net", "algo", "reducer", "rounds", "speedup_vs_sync",
+                 "final_err", "iters", "wall_s", "comm_bytes", "comm_time_s"])
     from benchmarks.common import save_artifact, save_bench
 
     save_artifact("table2_nonconvex", rows)
-    save_bench("table2_nonconvex", rows)
+    save_bench("table2_nonconvex", rows, meta={"reducers": list(reducers)})
     return rows
 
 
 if __name__ == "__main__":
     import sys
 
-    run(quick="--full" not in sys.argv)
+    from benchmarks.common import parse_reducers
+
+    run(quick="--full" not in sys.argv, reducers=parse_reducers(sys.argv))

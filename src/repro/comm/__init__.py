@@ -5,6 +5,8 @@ from repro.comm.cost import (
     NetworkModel,
     comm_summary,
     comm_summary_for,
+    dense_bytes,
+    link_model,
     round_bytes,
     round_time,
 )
@@ -24,7 +26,9 @@ __all__ = [
     "TopKMean",
     "comm_summary",
     "comm_summary_for",
+    "dense_bytes",
     "get_reducer",
+    "link_model",
     "round_bytes",
     "round_time",
 ]

@@ -14,10 +14,15 @@ deployments and identical across reducers); set ``count_downlink=True`` to
 include it.
 
 Defaults model a 1 Gbit/s WAN with 5 ms round latency — override per run
-via TrainConfig.comm_latency_s / comm_bandwidth_gbps.
+via TrainConfig.comm_latency_s / comm_bandwidth_gbps, or pick a calibrated
+preset with ``link_model("ici" | "dcn" | "wan")``: the ici/dcn numbers are
+derived from the v5e interconnect constants in ``launch/mesh.py``
+(ICI_BW/DCN_BW), so modeled comm time in benchmarks lines up with the
+roofline's hardware model.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 import jax
@@ -34,11 +39,40 @@ class NetworkModel:
     def bandwidth_Bps(self) -> float:
         return self.bandwidth_gbps * 1e9 / 8.0
 
+    def time(self, n_bytes: float) -> float:
+        """alpha-beta cost of moving n_bytes over this link."""
+        return self.latency_s + n_bytes / self.bandwidth_Bps
+
+
+def link_model(name: str) -> NetworkModel:
+    """Calibrated per-hop presets (α, β) for the hierarchical topology.
+
+    Bandwidths come from the v5e constants in ``launch/mesh.py`` — ICI_BW
+    (50 GB/s/link) and DCN_BW (6.25 GB/s/host) — converted to Gbit/s;
+    latencies are order-of-magnitude link setup costs (µs-scale ICI,
+    tens of µs DCN, ms-scale WAN barrier).
+    """
+    from repro.launch.mesh import DCN_BW, ICI_BW
+
+    presets = {
+        "ici": NetworkModel(latency_s=1e-6, bandwidth_gbps=ICI_BW * 8 / 1e9),
+        "dcn": NetworkModel(latency_s=25e-6, bandwidth_gbps=DCN_BW * 8 / 1e9),
+        "wan": NetworkModel(latency_s=5e-3, bandwidth_gbps=1.0),
+    }
+    try:
+        return presets[name]
+    except KeyError:
+        raise ValueError(f"unknown link preset: {name!r} "
+                         f"(expected {sorted(presets)})") from None
+
 
 def dense_bytes(template) -> int:
-    """Uncompressed payload of one model replica (the downlink broadcast)."""
-    size = lambda l: int(jnp.prod(jnp.asarray(l.shape))) if l.shape else 1
-    return sum(size(l) * jnp.dtype(l.dtype).itemsize
+    """Uncompressed payload of one model replica (the downlink broadcast).
+
+    Static shape arithmetic only — no traced arrays (leaf shapes are always
+    concrete, even for ShapeDtypeStructs inside jit).
+    """
+    return sum(math.prod(l.shape) * jnp.dtype(l.dtype).itemsize
                for l in jax.tree.leaves(template))
 
 
@@ -58,19 +92,25 @@ def round_time(model: NetworkModel, n_bytes: int) -> float:
 
 
 def comm_summary_for(cfg, template, n_clients: int, n_rounds: int) -> dict:
-    """comm_summary resolved from a TrainConfig's reducer/comm_* fields.
+    """comm_summary resolved from a TrainConfig's reducer/comm_*/topology
+    fields.
 
     The one place benchmarks and examples turn a finished run's config +
-    round count into the modeled comm report.
+    round count into the modeled comm report. Star configs (the default)
+    produce the flat single-link report; hierarchical configs report the
+    per-hop breakdown (with a composite "reducer" name) so the summary
+    always prices the topology the run actually used.
     """
-    from repro.comm.reducer import get_reducer
+    from repro.engine.engine import topology_for
+    from repro.engine.topology import Star
 
-    return comm_summary(
-        get_reducer(cfg.reducer, quant_bits=cfg.quant_bits,
-                    topk_frac=cfg.topk_frac),
-        template, n_clients, n_rounds,
-        NetworkModel(latency_s=cfg.comm_latency_s,
-                     bandwidth_gbps=cfg.comm_bandwidth_gbps))
+    topo = topology_for(cfg)
+    if isinstance(topo, Star):
+        return comm_summary(topo.reducer, template, n_clients, n_rounds,
+                            topo.network)
+    summ = topo.summary(template, n_clients, n_rounds)
+    summ["reducer"] = "+".join(h["reducer"] for h in summ["hops"])
+    return summ
 
 
 def comm_summary(reducer, template, n_clients: int, n_rounds: int,

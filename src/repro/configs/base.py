@@ -143,3 +143,10 @@ class TrainConfig:
     topk_frac: float = 0.1       # kept fraction for reducer="topk"
     comm_latency_s: float = 5e-3      # α: fixed per-round latency
     comm_bandwidth_gbps: float = 1.0  # β⁻¹: link bandwidth
+    # communication topology (repro.engine): "star" is the paper's flat
+    # parameter-server setting; "hier" splits clients into n_pods pods —
+    # ``reducer`` runs intra-pod over calibrated ICI, ``inter_reducer``
+    # inter-pod over the comm_latency_s/comm_bandwidth_gbps WAN link.
+    topology: str = "star"
+    n_pods: int = 2
+    inter_reducer: str = "int8"

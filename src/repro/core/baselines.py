@@ -1,22 +1,21 @@
 """Baseline drivers the paper compares against (§5): SyncSGD, LB-SGD, CR-PSGD.
 
-All three are degenerate schedules of the same (train_step_local, sync_step)
-pair — k = 1 with different batch policies — so the baseline implementations
-share every line of distributed machinery with STL-SGD. CR-PSGD's growing
-batch is realised by the data pipeline (``crpsgd_batch_sizes``), keeping the
-step function shape-stable per size.
+All three are degenerate Algorithms in the ``repro.engine`` registry — the
+``EveryStep`` sync policy (k = 1) with different ``LocalUpdate`` batch rules
+— so the baseline implementations share every line of distributed machinery
+with STL-SGD. CR-PSGD's growing batch is realised by the data pipeline
+(``crpsgd_batch_sizes``), keeping the step function shape-stable per size.
 """
 from __future__ import annotations
 
-from typing import Iterator, List
+from typing import List
 
 from repro.configs.base import TrainConfig
 from repro.core.stl_sgd import StagewiseDriver
 
 
 def sync_sgd_driver(tcfg: TrainConfig, train_step, sync_step) -> StagewiseDriver:
-    return StagewiseDriver(tcfg.replace_algo("sync") if hasattr(tcfg, "replace_algo")
-                           else _with_algo(tcfg, "sync"), train_step, sync_step)
+    return StagewiseDriver(_with_algo(tcfg, "sync"), train_step, sync_step)
 
 
 def lb_sgd_driver(tcfg: TrainConfig, train_step, sync_step) -> StagewiseDriver:

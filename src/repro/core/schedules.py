@@ -17,21 +17,18 @@ A ``Stage`` bundles (η_s, T_s, k_s). Schedules produce stages:
       Non-IID: k₁ = min( σ/√(6 η₁ L N (σ² + 4 ζ*)),  1/(9 η₁ L) )
 
 and ``comm_rounds`` computes Σ_s T_s / k_s — the quantity Tables 1–3 count.
+
+``Stage``, ``k_growth`` and the schedule expansion now live in the
+``repro.engine`` SyncPolicy layer (each policy owns its η_s/T_s/k_s rule);
+this module re-exports them and keeps ``make_stages(algo, ...)`` as the
+name-based convenience wrapper over the algorithm registry.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Iterator, List
+from typing import List
 
-
-@dataclass(frozen=True)
-class Stage:
-    s: int          # 1-based stage index
-    eta: float      # learning rate η_s
-    T: int          # iterations in this stage
-    k: int          # communication period (⌊k_s⌋, ≥ 1 — Alg. 2 line 2)
-    k_raw: float    # un-floored k_s (the geometric/linear state variable)
+from repro.engine.policy import Stage, k_growth  # noqa: F401  (re-export)
 
 
 def theory_k1(eta1: float, L: float, N: int, sigma: float = 1.0,
@@ -43,34 +40,12 @@ def theory_k1(eta1: float, L: float, N: int, sigma: float = 1.0,
     return min(sigma / denom, 1.0 / (9.0 * eta1 * L))
 
 
-def k_growth(iid: bool, geometric: bool, s: int) -> float:
-    """Multiplier applied to k₁ at stage s (1-based)."""
-    if geometric:
-        return 2.0 ** (s - 1) if iid else math.sqrt(2.0) ** (s - 1)
-    return float(s) if iid else math.sqrt(float(s))
-
-
 def make_stages(algo: str, eta1: float, T1: int, k1: float, n_stages: int,
                 iid: bool = True) -> List[Stage]:
-    """Expand a schedule into concrete stages."""
-    stages = []
-    for s in range(1, n_stages + 1):
-        if algo in ("stl_sc", "stl_nc1"):
-            eta = eta1 / (2.0 ** (s - 1))
-            T = T1 * (2 ** (s - 1))
-            kr = k1 * k_growth(iid, True, s)
-        elif algo == "stl_nc2":
-            eta = eta1 / s
-            T = T1 * s
-            kr = k1 * k_growth(iid, False, s)
-        elif algo == "local":
-            eta, T, kr = eta1, T1, k1  # fixed-k Local SGD: repeat identical stages
-        elif algo in ("sync", "lb", "crpsgd"):
-            eta, T, kr = eta1, T1, 1.0
-        else:
-            raise ValueError(algo)
-        stages.append(Stage(s=s, eta=eta, T=T, k=max(1, int(kr)), k_raw=kr))
-    return stages
+    """Expand a registered algorithm's SyncPolicy into concrete stages."""
+    from repro.engine.algorithm import get_algorithm
+
+    return get_algorithm(algo).sync_policy.stages(eta1, T1, k1, n_stages, iid)
 
 
 def comm_rounds(stages: List[Stage]) -> int:

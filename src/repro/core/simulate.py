@@ -1,24 +1,23 @@
-"""N-client Local-SGD simulator (single host, vmapped clients).
+"""N-client Local-SGD simulator — the vmapped execution backend.
 
 This is the engine behind the paper-fidelity convergence experiments
 (Figures 1–4, Tables 1–2): N client replicas live on a stacked leading axis,
 local steps are vmapped (no communication), and a communication round is a
-``repro.comm`` reducer over the leading axis — DenseMean by default, which
-is bit-exact Algorithm 1 semantics; compressed reducers (QuantizedMean,
-TopKMean) trade per-round bytes for quantization noise with error feedback.
+``repro.engine`` Topology reduction over the leading axis — a Star of the
+configured ``repro.comm`` reducer by default (DenseMean is bit-exact
+Algorithm 1 semantics), or a Hierarchical pod topology composing a dense
+intra-pod average with a compressed inter-pod round.
 
-The same `Stage` objects drive this simulator and the distributed trainer
-(core/local_sgd.py), so the convergence experiments validate exactly the
-schedule code the production launcher runs.
+Since the engine refactor this module is a *backend*: ``run()`` resolves
+``cfg.algo`` through ``repro.engine.get_algorithm`` and hands a
+``VmapSimulatorBackend`` to ``Engine.run`` — the SyncPolicy owns the stage
+stream, the LocalUpdate owns the batch rule (large-batch / growing-batch
+baselines included), and the same Engine drives the distributed
+``StagewiseDriver``. The historical signature and the DenseMean trajectory
+are preserved bit-for-bit (regression-pinned in tests/test_engine.py).
 
-Supported algorithms
-  sync    — SyncSGD: k=1
-  lb      — Large-batch SyncSGD: k=1, batch ×= lb_factor
-  crpsgd  — CR-PSGD [38]: k=1, batch grows geometrically (masked fixed buffer)
-  local   — Local SGD (Alg. 1), fixed k, optional η_t = η₁/(1+αt) decay
-  stl_sc  — STL-SGD^sc (Alg. 2)
-  stl_nc1 — STL-SGD^nc Option 1 (Alg. 3, geometric, prox surrogate)
-  stl_nc2 — STL-SGD^nc Option 2 (Alg. 3, linear, prox surrogate)
+Algorithm names accepted by ``run`` are whatever the registry knows:
+  sync, lb, crpsgd, local, stl_sc, stl_nc1, stl_nc2 (see repro.engine).
 """
 from __future__ import annotations
 
@@ -30,10 +29,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import get_reducer
-from repro.comm.reducer import Reducer
 from repro.configs.base import TrainConfig
-from repro.core import schedules as sched
 from repro.core.prox import prox_loss
+from repro.engine.engine import Engine, StageStatus
 from repro.utils.tree import tree_broadcast_leading, tree_mean_leading, tree_zeros_like
 
 # fold_in salt deriving the reducer's rng from the round rng without
@@ -58,17 +56,19 @@ def _sample_batch(data, rng, batch: int):
 
 def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
                   lr_alpha: float, grow: float, b0: int, max_batch: int,
-                  reducer: Optional[Reducer] = None):
+                  reducer=None):
     """One communication round = k vmapped local steps + 1 reduced average.
 
     Returned fn: (carry, rng, data, center, eta) -> carry where
     carry = (params_stacked, momentum_stacked, t_global_f32, comm_state).
     loss_fn(params, batch, center, weights) -> scalar.
 
-    ``reducer`` (default DenseMean) owns the parameter average; its
-    residual/error-feedback state rides in the carry. Momentum is always
-    dense-averaged: it never leaves the client in a real deployment, the
-    average only mirrors Alg. 1's replica-consensus bookkeeping.
+    ``reducer`` (default DenseMean) owns the parameter average — any object
+    with the reduce/init_state protocol works, i.e. a ``comm.Reducer`` or a
+    ``engine.Topology``; its residual/error-feedback state rides in the
+    carry. Momentum is always dense-averaged: it never leaves the client in
+    a real deployment, the average only mirrors Alg. 1's replica-consensus
+    bookkeeping.
     """
     reducer = reducer if reducer is not None else get_reducer(None)
 
@@ -111,10 +111,127 @@ def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
     return round_fn
 
 
+class VmapSimulatorBackend:
+    """Engine backend: N vmapped client replicas on one host.
+
+    Owns the chunked-scan execution of each stage (``chunk_rounds``
+    communication rounds per jit call, per-round eval inside the scan), the
+    (round, objective) history, and the target/max_rounds early exit.
+    Compiled chunk functions are cached per (k, batch) — stages that only
+    change η reuse the compilation (η is a traced operand).
+    """
+
+    def __init__(self, loss_fn: Callable, init_params, client_data,
+                 eval_fn: Callable, *, eval_every: int = 1,
+                 max_rounds: Optional[int] = None,
+                 target: Optional[float] = None, lr_alpha: float = 0.0,
+                 chunk_rounds: int = 32):
+        self.loss_fn = loss_fn
+        self.init_params = init_params
+        self.client_data = client_data
+        self.eval_fn = eval_fn
+        self.eval_every = eval_every
+        self.max_rounds = max_rounds
+        self.target = target
+        self.lr_alpha = lr_alpha
+        self.chunk_rounds = chunk_rounds
+
+    def setup(self, engine: Engine):
+        cfg = engine.cfg
+        algo = engine.algorithm
+        N = jax.tree.leaves(self.client_data)[0].shape[0]
+        self.use_prox = algo.uses_center(cfg)
+        ploss = prox_loss(self.loss_fn, algo.gamma_inv(cfg))
+        self.wloss = algo.local_update.make_loss(ploss)
+        self.batch = algo.local_update.round_batch(cfg)
+        self.grow = algo.local_update.growth(cfg)
+
+        self.params = tree_broadcast_leading(self.init_params, N)
+        self.mom = tree_zeros_like(self.params)
+        self.comm_state = engine.topology.init_state(self.params)
+        self.rng = jax.random.key(cfg.seed)
+        self.history: List[Record] = [
+            Record(0, 0, float(self.eval_fn(self.init_params)))]
+        self.rounds_done = 0
+        self.iters_done = 0
+        self.t_global = 0.0
+        self._chunk_cache = {}
+        engine.set_cost_basis(self.init_params, N)
+
+    def _chunk_fn(self, engine: Engine, k: int, b: int):
+        key = (k, b)
+        if key not in self._chunk_cache:
+            cfg = engine.cfg
+            round_fn = make_round_fn(
+                self.wloss, k=k, batch=b, momentum=cfg.momentum,
+                lr_alpha=self.lr_alpha, grow=self.grow,
+                b0=cfg.batch_per_client, max_batch=cfg.max_batch,
+                reducer=engine.topology)
+            eval_fn = self.eval_fn
+
+            @partial(jax.jit, static_argnames=("n",))
+            def chunk_fn(carry, rng_c, data, ctr, eta, n):
+                def body(c, rng_r):
+                    c = round_fn(c, rng_r, data, ctr, eta)
+                    return c, eval_fn(tree_mean_leading(c[0]))
+                return jax.lax.scan(body, carry, jax.random.split(rng_c, n))
+
+            self._chunk_cache[key] = chunk_fn
+        return self._chunk_cache[key]
+
+    def run_stage(self, stage, engine: Engine) -> StageStatus:
+        k = stage.k
+        chunk_fn = self._chunk_fn(engine, k, self.batch)
+        # Non-prox algorithms have no center: pass None (an empty pytree) so
+        # nothing downstream can silently consume a stale parameter snapshot.
+        center = tree_mean_leading(self.params) if self.use_prox else None
+
+        status = StageStatus()
+        n_rounds = -(-stage.T // k)  # ceil
+        carry = (self.params, self.mom,
+                 jnp.asarray(self.t_global, jnp.float32), self.comm_state)
+        done_in_stage = 0
+        while done_in_stage < n_rounds:
+            n = min(self.chunk_rounds, n_rounds - done_in_stage)
+            self.rng, sub = jax.random.split(self.rng)
+            carry, vals = chunk_fn(carry, sub, self.client_data, center,
+                                   stage.eta, n)
+            vals = list(map(float, vals))
+            hit = None
+            for j, v in enumerate(vals):
+                rd = self.rounds_done + j + 1
+                at_target = self.target is not None and v <= self.target
+                if rd % self.eval_every == 0 \
+                        or (done_in_stage + j + 1) == n_rounds \
+                        or (at_target and hit is None):
+                    self.history.append(
+                        Record(rd, self.iters_done + (j + 1) * k, v))
+                if at_target and hit is None:
+                    hit = rd
+            self.rounds_done += n
+            self.iters_done += n * k
+            done_in_stage += n
+            status.rounds += n
+            status.iters += n * k
+            if hit is not None:
+                status.stop = True
+                break
+            if self.max_rounds is not None \
+                    and self.rounds_done >= self.max_rounds:
+                status.stop = True
+                break
+        self.params, self.mom, tg, self.comm_state = carry
+        self.t_global = float(tg)
+        return status
+
+    def finish(self, engine: Engine) -> List[Record]:
+        return self.history
+
+
 def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
         eval_fn: Callable, *, eval_every: int = 1, max_rounds: Optional[int] = None,
         target: Optional[float] = None, lr_alpha: float = 0.0,
-        chunk_rounds: int = 32, reducer=None) -> List[Record]:
+        chunk_rounds: int = 32, reducer=None, topology=None) -> List[Record]:
     """Run ``cfg.algo`` and return the (comm-round, objective) trace.
 
     loss_fn(params, batch) -> scalar (per-client minibatch loss).
@@ -125,84 +242,15 @@ def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
     ``reducer`` — a comm.Reducer or spec string for the communication round;
     defaults to ``cfg.reducer`` (DenseMean unless configured otherwise),
     which is bit-exact with the historical dense path.
+    ``topology`` — an engine.Topology or spec string ("star" | "hier");
+    defaults to ``cfg.topology`` with ``reducer`` on the first hop.
     """
-    N = jax.tree.leaves(client_data)[0].shape[0]
-    algo = cfg.algo
-    reducer = get_reducer(reducer if reducer is not None else cfg.reducer,
-                          quant_bits=cfg.quant_bits, topk_frac=cfg.topk_frac)
-    use_prox = algo in ("stl_nc1", "stl_nc2") and cfg.gamma_inv > 0.0
-    ploss = prox_loss(loss_fn, cfg.gamma_inv if use_prox else 0.0)
-
-    def wloss(params, batch, center, weights):
-        if algo == "crpsgd":
-            per = jax.vmap(
-                lambda x: ploss(params, jax.tree.map(lambda a: a[None], x), center)
-            )(batch)
-            return jnp.sum(per * weights)
-        return ploss(params, batch, center)
-
-    grow = cfg.batch_growth if algo == "crpsgd" else 1.0
-    stages = sched.make_stages(algo, cfg.eta1, cfg.T1, cfg.k1, cfg.n_stages, cfg.iid)
-
-    params = tree_broadcast_leading(init_params, N)
-    mom = tree_zeros_like(params)
-    comm_state = reducer.init_state(params)  # residuals persist across stages
-    rng = jax.random.key(cfg.seed)
-    history: List[Record] = [Record(0, 0, float(eval_fn(init_params)))]
-    rounds_done = 0
-    iters_done = 0
-    t_global = 0.0
-    eval_jit = jax.jit(eval_fn)
-
-    for stage in stages:
-        if algo == "lb":
-            k, b = 1, cfg.batch_per_client * 4
-        elif algo == "crpsgd":
-            k, b = 1, cfg.max_batch
-        else:
-            k, b = stage.k, cfg.batch_per_client
-        round_fn = make_round_fn(
-            wloss, k=k, batch=b, momentum=cfg.momentum, lr_alpha=lr_alpha,
-            grow=grow, b0=cfg.batch_per_client, max_batch=cfg.max_batch,
-            reducer=reducer)
-        # Non-prox algorithms have no center: pass None (an empty pytree) so
-        # nothing downstream can silently consume a stale parameter snapshot.
-        center = tree_mean_leading(params) if use_prox else None
-
-        @partial(jax.jit, static_argnames=("n",))
-        def chunk_fn(carry, rng_c, data, ctr, eta, n):
-            def body(c, rng_r):
-                c = round_fn(c, rng_r, data, ctr, eta)
-                return c, eval_fn(tree_mean_leading(c[0]))
-            return jax.lax.scan(body, carry, jax.random.split(rng_c, n))
-
-        n_rounds = -(-stage.T // k)  # ceil
-        carry = (params, mom, jnp.asarray(t_global, jnp.float32), comm_state)
-        done_in_stage = 0
-        while done_in_stage < n_rounds:
-            n = min(chunk_rounds, n_rounds - done_in_stage)
-            rng, sub = jax.random.split(rng)
-            carry, vals = chunk_fn(carry, sub, client_data, center, stage.eta, n)
-            vals = list(map(float, vals))
-            hit = None
-            for j, v in enumerate(vals):
-                rd = rounds_done + j + 1
-                if rd % eval_every == 0 or (done_in_stage + j + 1) == n_rounds \
-                        or (target is not None and v <= target and hit is None):
-                    history.append(Record(rd, iters_done + (j + 1) * k, v))
-                if target is not None and v <= target and hit is None:
-                    hit = rd
-            rounds_done += n
-            iters_done += n * k
-            done_in_stage += n
-            if hit is not None:
-                return history
-            if max_rounds is not None and rounds_done >= max_rounds:
-                return history
-        params, mom, tg, comm_state = carry
-        t_global = float(tg)
-
-    return history
+    engine = Engine(cfg.algo, cfg, topology=topology, reducer=reducer)
+    backend = VmapSimulatorBackend(
+        loss_fn, init_params, client_data, eval_fn, eval_every=eval_every,
+        max_rounds=max_rounds, target=target, lr_alpha=lr_alpha,
+        chunk_rounds=chunk_rounds)
+    return engine.run(backend)
 
 
 def rounds_to_target(history: List[Record], target: float) -> Optional[int]:

@@ -1,12 +1,17 @@
-"""STL-SGD stagewise driver for the distributed trainer.
+"""STL-SGD stagewise driver — the pjit execution backend.
 
-Orchestrates Algorithms 2/3 over (train_step_local, sync_step) pairs built by
-``core.local_sgd``: per stage s it fixes η_s, runs T_s local iterations and
-triggers the parameter-averaging round every ⌊k_s⌋ steps; for the ^nc variants
-the loss is the prox surrogate f^γ centered at the stage-start average.
+Orchestrates any registered algorithm over (train_step_local, sync_step)
+pairs built by ``core.local_sgd``: per stage s the SyncPolicy fixes η_s,
+the driver runs T_s local iterations and triggers the parameter-averaging
+round every ⌊k_s⌋ steps; for the ^nc variants the loss is the prox
+surrogate f^γ centered at the stage-start average.
 
-The driver is step-function-agnostic — the tests drive it with tiny CPU
-models, the launcher with pjit'd multi-pod steps.
+Since the engine refactor, ``StagewiseDriver.run`` is a thin wrapper: it
+hands a ``DriverBackend`` to the same ``repro.engine.Engine`` that drives
+the vmapped simulator, so both front-ends consume one stage stream and one
+topology-priced comm ledger. The driver is step-function-agnostic — the
+tests drive it with tiny CPU models, the launcher with pjit'd multi-pod
+steps.
 """
 from __future__ import annotations
 
@@ -16,9 +21,11 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.comm import NetworkModel, get_reducer, round_bytes, round_time
+from repro.comm import NetworkModel, get_reducer
 from repro.configs.base import TrainConfig
-from repro.core import schedules as sched
+from repro.engine.algorithm import get_algorithm
+from repro.engine.engine import Engine, StageStatus
+from repro.engine.topology import Star
 from repro.utils.tree import tree_mean_leading
 from repro.utils.logging import get_logger
 
@@ -46,6 +53,66 @@ class DriverState:
     comm_time_s: float = 0.0       # α–β modeled wall-clock of those rounds
 
 
+class DriverBackend:
+    """Engine backend: a stream of pjit step calls on real batches."""
+
+    def __init__(self, driver: "StagewiseDriver", ds: DriverState, batches,
+                 max_iters: Optional[int]):
+        self.driver = driver
+        self.ds = ds
+        self.it = iter(batches)
+        self.max_iters = max_iters
+
+    def setup(self, engine: Engine):
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            self.ds.state["params"])
+        n_clients = jax.tree.leaves(self.ds.state["params"])[0].shape[0]
+        engine.set_cost_basis(template, n_clients)
+
+    def run_stage(self, stage, engine: Engine) -> StageStatus:
+        drv, ds = self.driver, self.ds
+        if drv.uses_center:
+            ds.center = tree_mean_leading(ds.state["params"])
+        losses = []
+        status = StageStatus()
+        done = 0
+        while done < stage.T:
+            burst = min(stage.k, stage.T - done)
+            for _ in range(burst):
+                batch = next(self.it)
+                if drv.uses_center:
+                    ds.state, m = drv.train_step(ds.state, batch, stage.eta,
+                                                 ds.center)
+                else:
+                    ds.state, m = drv.train_step(ds.state, batch, stage.eta)
+                losses.append(float(m["loss"]))
+                done += 1
+                ds.iters_total += 1
+                if self.max_iters and ds.iters_total >= self.max_iters:
+                    break
+            ds.state = drv.sync_step(ds.state)
+            status.rounds += 1
+            ds.rounds_total += 1
+            if self.max_iters and ds.iters_total >= self.max_iters:
+                status.stop = True
+                break
+        status.iters = done
+        res = StageResult(stage.s, stage.eta, stage.k, done, status.rounds,
+                          float(jnp.mean(jnp.asarray(losses))) if losses
+                          else float("nan"))
+        ds.results.append(res)
+        log.info("stage %d: eta=%.3g k=%d iters=%d rounds=%d loss=%.4f",
+                 res.stage, res.eta, res.k, res.iters, res.rounds,
+                 res.mean_loss)
+        return status
+
+    def finish(self, engine: Engine) -> DriverState:
+        self.ds.comm_bytes_total = engine.report.comm_bytes_total
+        self.ds.comm_time_s = engine.report.comm_time_s
+        return self.ds
+
+
 class StagewiseDriver:
     """Runs cfg.algo over a stream of batches.
 
@@ -64,63 +131,34 @@ class StagewiseDriver:
         # reducer the sync_step itself was built with (local_sgd.
         # build_sync_step tags it, surviving jax.jit via __wrapped__) >
         # tcfg.reducer. The tag keeps accounting from silently diverging
-        # from what the round actually transmits.
+        # from what the round actually transmits — which is also why the
+        # driver always prices a Star topology: sync_step transmits flat.
         if reducer is None:
             reducer = getattr(sync_step, "reducer", None) or getattr(
                 getattr(sync_step, "__wrapped__", None), "reducer", None)
         self.reducer = get_reducer(
             reducer if reducer is not None else tcfg.reducer,
             quant_bits=tcfg.quant_bits, topk_frac=tcfg.topk_frac)
+        if getattr(tcfg, "topology", "star") not in (None, "star", "flat"):
+            # sync_step transmits a flat client-axis average; accepting a
+            # hierarchical config here would make the driver's ledger and
+            # comm_summary_for price different topologies for one run.
+            raise ValueError(
+                f"StagewiseDriver executes a flat sync round; "
+                f"topology={tcfg.topology!r} is only supported by the "
+                f"simulator backend (core.simulate.run)")
         self.net = NetworkModel(latency_s=tcfg.comm_latency_s,
                                 bandwidth_gbps=tcfg.comm_bandwidth_gbps)
-        self.stages = sched.make_stages(
-            tcfg.algo, tcfg.eta1, tcfg.T1, tcfg.k1, tcfg.n_stages, tcfg.iid)
+        self.algorithm = get_algorithm(tcfg.algo)
+        self.stages = self.algorithm.stages(tcfg)
 
     def run(self, state: dict, batches, max_iters: Optional[int] = None
             ) -> DriverState:
         ds = DriverState(state=state)
-        template = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
-            state["params"])
-        n_clients = jax.tree.leaves(state["params"])[0].shape[0]
-        bytes_per_round = round_bytes(self.reducer, template, n_clients,
-                                      self.net)
-        time_per_round = round_time(self.net, bytes_per_round)
-        it = iter(batches)
-        for stage in self.stages:
-            if self.uses_center:
-                ds.center = tree_mean_leading(ds.state["params"])
-            losses = []
-            rounds = 0
-            done = 0
-            while done < stage.T:
-                burst = min(stage.k, stage.T - done)
-                for _ in range(burst):
-                    batch = next(it)
-                    if self.uses_center:
-                        ds.state, m = self.train_step(ds.state, batch, stage.eta,
-                                                      ds.center)
-                    else:
-                        ds.state, m = self.train_step(ds.state, batch, stage.eta)
-                    losses.append(float(m["loss"]))
-                    done += 1
-                    ds.iters_total += 1
-                    if max_iters and ds.iters_total >= max_iters:
-                        break
-                ds.state = self.sync_step(ds.state)
-                rounds += 1
-                ds.rounds_total += 1
-                ds.comm_bytes_total += bytes_per_round
-                ds.comm_time_s += time_per_round
-                if max_iters and ds.iters_total >= max_iters:
-                    break
-            res = StageResult(stage.s, stage.eta, stage.k, done, rounds,
-                              float(jnp.mean(jnp.asarray(losses))) if losses else float("nan"))
-            ds.results.append(res)
-            log.info("stage %d: eta=%.3g k=%d iters=%d rounds=%d loss=%.4f",
-                     res.stage, res.eta, res.k, res.iters, res.rounds, res.mean_loss)
-            if max_iters and ds.iters_total >= max_iters:
-                break
+        # a fresh Engine per run: its report is the run's comm ledger
+        engine = Engine(self.algorithm, self.tcfg,
+                        topology=Star(reducer=self.reducer, network=self.net))
+        ds = engine.run(DriverBackend(self, ds, batches, max_iters))
         log.info("comm: reducer=%s rounds=%d bytes=%.3e modeled_time=%.3fs",
                  self.reducer.name, ds.rounds_total, ds.comm_bytes_total,
                  ds.comm_time_s)

@@ -1,0 +1,61 @@
+# First-class Algorithm/SyncPolicy/Topology API. An Algorithm bundles a
+# SyncPolicy (when to communicate: the stagewise η_s/T_s/k_s schedules and
+# prox-center policy) with a LocalUpdate (how clients step: plain SGD,
+# large-batch, growing-batch); a Topology routes the round's bytes (flat
+# star or hierarchical pod/WAN) with per-hop α–β pricing; the Engine drives
+# any registered algorithm through either execution backend (vmapped
+# simulator / pjit stagewise driver) over one shared stage stream.
+from repro.engine.algorithm import (
+    Algorithm,
+    algorithm_names,
+    get_algorithm,
+    register,
+)
+from repro.engine.engine import Engine, EngineReport, StageStatus, topology_for
+from repro.engine.policy import (
+    EveryStep,
+    FixedPeriod,
+    Stage,
+    StagewiseGeometric,
+    StagewiseLinear,
+    SyncPolicy,
+)
+from repro.engine.topology import (
+    Hierarchical,
+    HopCost,
+    Star,
+    Topology,
+    get_topology,
+)
+from repro.engine.update import (
+    GrowingBatchUpdate,
+    LargeBatchUpdate,
+    LocalUpdate,
+    SgdUpdate,
+)
+
+__all__ = [
+    "Algorithm",
+    "Engine",
+    "EngineReport",
+    "EveryStep",
+    "FixedPeriod",
+    "GrowingBatchUpdate",
+    "Hierarchical",
+    "HopCost",
+    "LargeBatchUpdate",
+    "LocalUpdate",
+    "SgdUpdate",
+    "Stage",
+    "StageStatus",
+    "StagewiseGeometric",
+    "StagewiseLinear",
+    "Star",
+    "SyncPolicy",
+    "Topology",
+    "algorithm_names",
+    "get_algorithm",
+    "get_topology",
+    "register",
+    "topology_for",
+]

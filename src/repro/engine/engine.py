@@ -1,0 +1,123 @@
+"""Engine — one stage-stream driver for every execution backend.
+
+``Engine.run(backend)`` walks the Algorithm's stage stream (the SyncPolicy's
+(η_s, T_s, k_s) schedule) and delegates stage execution to a *backend*:
+
+  * ``core.simulate.VmapSimulatorBackend`` — N vmapped client replicas on
+    one host (the paper-fidelity convergence engine);
+  * ``core.stl_sgd.DriverBackend`` — pjit step functions over a mesh client
+    axis (the production trainer).
+
+Both front-ends therefore provably run the same schedule, the same
+prox-center policy, and the same topology-priced communication accounting —
+the engine owns the per-round byte/time ledger via its Topology, so
+"rounds × bytes × modeled seconds" is computed once, identically, for
+simulator traces and distributed runs.
+
+Backend contract (duck-typed, see ``StageStatus``):
+
+  setup(engine)               — allocate state; call
+                                ``engine.set_cost_basis(template, n)`` so
+                                the ledger can price rounds.
+  run_stage(stage, engine) -> StageStatus
+                              — run one stage (or a prefix of it, if a
+                                target/budget stops the run early).
+  finish(engine) -> result    — the front-end's native return value.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+from repro.comm.cost import NetworkModel
+from repro.engine.algorithm import Algorithm, get_algorithm
+from repro.engine.topology import Topology, get_topology
+
+
+@dataclass
+class StageStatus:
+    """What a backend did with one stage."""
+
+    rounds: int = 0
+    iters: int = 0
+    stop: bool = False   # target hit / budget exhausted — end the run
+
+
+@dataclass
+class EngineReport:
+    """Cross-backend run ledger: rounds, iterations, modeled comm cost."""
+
+    rounds_total: int = 0
+    iters_total: int = 0
+    comm_bytes_total: int = 0
+    comm_time_s: float = 0.0
+    stages_run: int = 0
+    hop_costs: List[Any] = field(default_factory=list)
+
+
+def topology_for(cfg, reducer=None, topology=None) -> Topology:
+    """Resolve a Topology from a TrainConfig's comm fields.
+
+    Priority: explicit ``topology`` arg > cfg.topology string. The reducer
+    (explicit arg > cfg.reducer) becomes the Star uplink reducer, or the
+    intra-pod reducer of a hierarchical topology (whose inter-pod reducer
+    comes from cfg.inter_reducer).
+    """
+    if isinstance(topology, Topology):
+        return topology
+    net = NetworkModel(latency_s=cfg.comm_latency_s,
+                       bandwidth_gbps=cfg.comm_bandwidth_gbps)
+    return get_topology(
+        topology if topology is not None else getattr(cfg, "topology", "star"),
+        reducer=reducer if reducer is not None else cfg.reducer,
+        network=net, n_pods=getattr(cfg, "n_pods", 2),
+        inter_reducer=getattr(cfg, "inter_reducer", "int8"),
+        quant_bits=cfg.quant_bits, topk_frac=cfg.topk_frac)
+
+
+class Engine:
+    """Drives one Algorithm over one Topology through one backend."""
+
+    def __init__(self, algorithm, cfg, topology=None, reducer=None):
+        self.algorithm: Algorithm = get_algorithm(algorithm)
+        self.cfg = cfg
+        self.topology: Topology = topology_for(cfg, reducer=reducer,
+                                               topology=topology)
+        self.stages = self.algorithm.stages(cfg)
+        self.report = EngineReport()
+        self._bytes_per_round: Optional[int] = None
+        self._time_per_round: Optional[float] = None
+
+    # -- comm-cost ledger ---------------------------------------------------
+
+    def set_cost_basis(self, template, n_clients: int):
+        """Price one round for this run (template = single-replica pytree)."""
+        self._template = template
+        self._n_clients = n_clients
+        hops = self.topology.hop_costs(template, n_clients)
+        self.report.hop_costs = hops
+        self._bytes_per_round = sum(h.bytes for h in hops)
+        self._time_per_round = sum(h.time_s for h in hops)
+
+    def comm_summary(self) -> dict:
+        """Per-hop comm report for the rounds run so far."""
+        return self.topology.summary(self._template, self._n_clients,
+                                     self.report.rounds_total)
+
+    # -- run loop -----------------------------------------------------------
+
+    def run(self, backend):
+        backend.setup(self)
+        if self._bytes_per_round is None:
+            raise RuntimeError(
+                "backend.setup() must call engine.set_cost_basis()")
+        for stage in self.stages:
+            status = backend.run_stage(stage, self)
+            self.report.stages_run += 1
+            self.report.rounds_total += status.rounds
+            self.report.iters_total += status.iters
+            self.report.comm_bytes_total += status.rounds * self._bytes_per_round
+            self.report.comm_time_s += status.rounds * self._time_per_round
+            if status.stop:
+                break
+        return backend.finish(self)

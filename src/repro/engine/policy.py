@@ -1,0 +1,100 @@
+"""SyncPolicy — *when* to communicate.
+
+A sync policy owns the stagewise schedule (η_s, T_s, k_s) and the
+prox-center policy (whether the stage start re-centers the ^nc prox
+surrogate). This is the paper's actual contribution factored into one
+object: Algorithms 2/3 differ from Local SGD *only* in their SyncPolicy.
+
+  EveryStep            k ≡ 1                       (SyncSGD and its batch
+                                                    variants)
+  FixedPeriod          k ≡ k₁                      (Local SGD, Alg. 1)
+  StagewiseGeometric   η/2, T×2, k×2 (IID) | ×√2   (Alg. 2 / Alg. 3 Opt. 1)
+  StagewiseLinear      η/s, T×s, k×s (IID) | ×√s   (Alg. 3 Opt. 2)
+
+Policies are pure: ``stages(eta1, T1, k1, n_stages, iid)`` expands to the
+concrete ``Stage`` list both execution backends consume, so the vmapped
+simulator and the pjit driver provably run the same schedule. ``Stage`` and
+the k-growth arithmetic live here (re-exported by ``core.schedules`` for
+compatibility) so the engine layer has no dependency on ``repro.core``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List
+
+
+@dataclass(frozen=True)
+class Stage:
+    s: int          # 1-based stage index
+    eta: float      # learning rate η_s
+    T: int          # iterations in this stage
+    k: int          # communication period (⌊k_s⌋, ≥ 1 — Alg. 2 line 2)
+    k_raw: float    # un-floored k_s (the geometric/linear state variable)
+
+
+def k_growth(iid: bool, geometric: bool, s: int) -> float:
+    """Multiplier applied to k₁ at stage s (1-based)."""
+    if geometric:
+        return 2.0 ** (s - 1) if iid else math.sqrt(2.0) ** (s - 1)
+    return float(s) if iid else math.sqrt(float(s))
+
+
+@dataclass(frozen=True)
+class SyncPolicy:
+    """Base protocol. ``recenter`` is the prox-center policy: True means the
+    prox surrogate re-centers at the averaged params at each stage start
+    (Alg. 3); False means no center is ever produced."""
+
+    recenter: bool = False
+
+    def stage(self, s: int, eta1: float, T1: int, k1: float,
+              iid: bool) -> Stage:
+        raise NotImplementedError
+
+    def stages(self, eta1: float, T1: int, k1: float, n_stages: int,
+               iid: bool = True) -> List[Stage]:
+        return [self.stage(s, eta1, T1, k1, iid)
+                for s in range(1, n_stages + 1)]
+
+
+@dataclass(frozen=True)
+class EveryStep(SyncPolicy):
+    """k ≡ 1: communicate after every local step (SyncSGD / LB / CR-PSGD)."""
+
+    def stage(self, s, eta1, T1, k1, iid):
+        return Stage(s=s, eta=eta1, T=T1, k=1, k_raw=1.0)
+
+
+@dataclass(frozen=True)
+class FixedPeriod(SyncPolicy):
+    """k ≡ k₁: Local SGD (Alg. 1) — identical stages, fixed period."""
+
+    def stage(self, s, eta1, T1, k1, iid):
+        return Stage(s=s, eta=eta1, T=T1, k=max(1, int(k1)), k_raw=k1)
+
+
+@dataclass(frozen=True)
+class StagewiseGeometric(SyncPolicy):
+    """η_{s+1}=η_s/2, T_{s+1}=2T_s, k_{s+1}=2k_s (IID) or √2·k_s (Non-IID).
+
+    Algorithm 2 (STL-SGD^sc) and Algorithm 3 Option 1 (with recenter=True).
+    """
+
+    def stage(self, s, eta1, T1, k1, iid):
+        kr = k1 * k_growth(iid, True, s)
+        return Stage(s=s, eta=eta1 / (2.0 ** (s - 1)), T=T1 * (2 ** (s - 1)),
+                     k=max(1, int(kr)), k_raw=kr)
+
+
+@dataclass(frozen=True)
+class StagewiseLinear(SyncPolicy):
+    """η_s=η₁/s, T_s=sT₁, k_s=sk₁ (IID) or √s·k₁ (Non-IID).
+
+    Algorithm 3 Option 2 (STL-SGD^nc, linear growth).
+    """
+
+    def stage(self, s, eta1, T1, k1, iid):
+        kr = k1 * k_growth(iid, False, s)
+        return Stage(s=s, eta=eta1 / s, T=T1 * s,
+                     k=max(1, int(kr)), k_raw=kr)

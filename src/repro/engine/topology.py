@@ -1,0 +1,211 @@
+"""Topology — *where* a communication round's bytes travel.
+
+A topology composes reducers over hops and prices each hop with its own
+α–β ``NetworkModel``:
+
+  Star          the paper's setting: every client uplinks to one server
+                over a single link (one hop, one reducer).
+  Hierarchical  pod/WAN deployment: a dense intra-pod reduce over fast ICI
+                followed by a (typically compressed) inter-pod reduce over
+                the slow WAN. Clients split into ``n_pods`` equal pods on
+                the leading replica axis; pod reductions run in parallel,
+                so the intra hop's modeled time uses per-pod bytes while
+                its byte count is the total traffic.
+
+Topologies expose the same ``init_state`` / ``reduce`` protocol as a
+``comm.Reducer`` (state is a pytree, reduce is jit/scan-safe), so the round
+function is agnostic to whether it averages over one hop or two — and
+``hop_costs`` replaces the single-link cost model with a per-hop
+(latency, bandwidth) list.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.cost import NetworkModel, link_model, round_bytes, round_time
+from repro.comm.reducer import DenseMean, Reducer, get_reducer
+
+
+@dataclass(frozen=True)
+class HopCost:
+    """Modeled cost of one hop of one communication round."""
+
+    hop: str            # "uplink" | "intra_pod" | "inter_pod"
+    reducer: str
+    network: NetworkModel
+    bytes: int          # total traffic crossing the hop per round
+    time_s: float       # α + serial_bytes / bandwidth (parallel links once)
+
+
+class Topology:
+    """Base protocol — reducer-compatible reduce + per-hop costing."""
+
+    name = "base"
+
+    def init_state(self, stacked):
+        raise NotImplementedError
+
+    def reduce(self, stacked, state, rng):
+        raise NotImplementedError
+
+    def hop_costs(self, template, n_clients: int) -> List[HopCost]:
+        raise NotImplementedError
+
+    def round_bytes(self, template, n_clients: int) -> int:
+        return sum(h.bytes for h in self.hop_costs(template, n_clients))
+
+    def round_time(self, template, n_clients: int) -> float:
+        return sum(h.time_s for h in self.hop_costs(template, n_clients))
+
+    def summary(self, template, n_clients: int, n_rounds: int) -> dict:
+        """Full per-hop comm report for a finished run."""
+        hops = self.hop_costs(template, n_clients)
+        per_round = sum(h.bytes for h in hops)
+        t_round = sum(h.time_s for h in hops)
+        return {
+            "topology": self.name,
+            "rounds": int(n_rounds),
+            "bytes_per_round": int(per_round),
+            "total_bytes": int(per_round) * int(n_rounds),
+            "round_time_s": t_round,
+            "total_time_s": t_round * int(n_rounds),
+            "hops": [{
+                "hop": h.hop, "reducer": h.reducer,
+                "latency_s": h.network.latency_s,
+                "bandwidth_gbps": h.network.bandwidth_gbps,
+                "bytes_per_round": int(h.bytes),
+                "time_per_round_s": h.time_s,
+                "total_time_s": h.time_s * int(n_rounds),
+            } for h in hops],
+        }
+
+
+@dataclass(frozen=True)
+class Star(Topology):
+    """Flat parameter-server topology — the paper's setting, one hop.
+
+    With ``reducer=DenseMean()`` this is bit-exact with calling the reducer
+    directly (the pre-engine behavior).
+    """
+
+    reducer: Reducer = field(default_factory=DenseMean)
+    network: NetworkModel = field(default_factory=NetworkModel)
+
+    name = "star"
+
+    def init_state(self, stacked):
+        return self.reducer.init_state(stacked)
+
+    def reduce(self, stacked, state, rng):
+        return self.reducer.reduce(stacked, state, rng)
+
+    def hop_costs(self, template, n_clients: int) -> List[HopCost]:
+        up = round_bytes(self.reducer, template, n_clients, self.network)
+        return [HopCost(hop="uplink", reducer=self.reducer.name,
+                        network=self.network, bytes=up,
+                        time_s=round_time(self.network, up))]
+
+
+@dataclass(frozen=True)
+class Hierarchical(Topology):
+    """Two-level pod topology: intra-pod reduce (fast link), then inter-pod
+    reduce over the pod means (slow link).
+
+    The client axis must be divisible by ``n_pods``. Pod p's replicas are
+    the contiguous slice [p·m, (p+1)·m). Both levels keep their own reducer
+    state (error-feedback residuals live per level), so e.g. a dense ICI
+    average composes with an int8-EF WAN round.
+    """
+
+    n_pods: int = 2
+    intra: Reducer = field(default_factory=DenseMean)
+    inter: Reducer = field(default_factory=DenseMean)
+    intra_net: NetworkModel = field(default_factory=lambda: link_model("ici"))
+    inter_net: NetworkModel = field(default_factory=lambda: link_model("wan"))
+
+    name = "hierarchical"
+
+    def _pods(self, stacked):
+        P = self.n_pods
+        return [jax.tree.map(lambda x: x[p * (x.shape[0] // P):
+                                         (p + 1) * (x.shape[0] // P)], stacked)
+                for p in range(P)]
+
+    def init_state(self, stacked):
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        if n % self.n_pods:
+            raise ValueError(
+                f"{n} clients not divisible into {self.n_pods} pods")
+        pods = self._pods(stacked)
+        pod_means = [jax.tree.map(lambda x: jnp.mean(x, axis=0), p)
+                     for p in pods]
+        stacked_means = jax.tree.map(lambda *xs: jnp.stack(xs), *pod_means)
+        return {"intra": tuple(self.intra.init_state(p) for p in pods),
+                "inter": self.inter.init_state(stacked_means)}
+
+    def reduce(self, stacked, state, rng):
+        pods = self._pods(stacked)
+        means, intra_states = [], []
+        for p, pod in enumerate(pods):
+            m, st = self.intra.reduce(pod, state["intra"][p],
+                                      jax.random.fold_in(rng, p))
+            means.append(m)
+            intra_states.append(st)
+        stacked_means = jax.tree.map(lambda *xs: jnp.stack(xs), *means)
+        consensus, inter_state = self.inter.reduce(
+            stacked_means, state["inter"],
+            jax.random.fold_in(rng, self.n_pods))
+        return consensus, {"intra": tuple(intra_states),
+                           "inter": inter_state}
+
+    def hop_costs(self, template, n_clients: int) -> List[HopCost]:
+        if n_clients % self.n_pods:
+            # same shape contract as init_state/reduce — pricing must not
+            # succeed for a configuration execution would reject
+            raise ValueError(
+                f"{n_clients} clients not divisible into {self.n_pods} pods")
+        m = n_clients // self.n_pods
+        intra_msg = self.intra.message_bytes(template)
+        inter_msg = self.inter.message_bytes(template)
+        intra_total = n_clients * intra_msg
+        inter_total = self.n_pods * inter_msg
+        return [
+            # pods reduce in parallel: time sees one pod's traffic
+            HopCost(hop="intra_pod", reducer=self.intra.name,
+                    network=self.intra_net, bytes=intra_total,
+                    time_s=self.intra_net.latency_s
+                    + m * intra_msg / self.intra_net.bandwidth_Bps),
+            HopCost(hop="inter_pod", reducer=self.inter.name,
+                    network=self.inter_net, bytes=inter_total,
+                    time_s=self.inter_net.latency_s
+                    + inter_total / self.inter_net.bandwidth_Bps),
+        ]
+
+
+def get_topology(spec, *, reducer=None, network: Optional[NetworkModel] = None,
+                 n_pods: int = 2, inter_reducer=None,
+                 quant_bits: int = 8, topk_frac: float = 0.1) -> Topology:
+    """Resolve a topology from a config string (or pass one through).
+
+    "star" (default) wraps ``reducer`` in the single-hop paper topology;
+    "hier"/"hierarchical" composes ``reducer`` intra-pod (dense by default)
+    with ``inter_reducer`` (int8 by default) inter-pod over calibrated
+    ICI/WAN links.
+    """
+    if isinstance(spec, Topology):
+        return spec
+    red = get_reducer(reducer, quant_bits=quant_bits, topk_frac=topk_frac)
+    if spec in (None, "star", "flat"):
+        return Star(reducer=red, network=network or NetworkModel())
+    if spec in ("hier", "hierarchical", "pods"):
+        inter = get_reducer(inter_reducer if inter_reducer is not None
+                            else "int8", quant_bits=quant_bits,
+                            topk_frac=topk_frac)
+        return Hierarchical(n_pods=n_pods, intra=red, inter=inter,
+                            intra_net=link_model("ici"),
+                            inter_net=network or link_model("wan"))
+    raise ValueError(f"unknown topology spec: {spec!r}")

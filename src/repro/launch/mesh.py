@@ -44,7 +44,9 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return _make_mesh((data, model), ("data", "model"))
 
 
-# v5e hardware constants for the roofline (per chip / per link)
+# v5e hardware constants for the roofline (per chip / per link). The α–β
+# presets in comm/cost.py (link_model) are calibrated against these.
 PEAK_FLOPS_BF16 = 197e12   # FLOP/s
 HBM_BW = 819e9             # B/s
 ICI_BW = 50e9              # B/s per link
+DCN_BW = 6.25e9            # B/s per host link (inter-pod data-center network)

@@ -24,6 +24,7 @@ from repro.configs.base import TrainConfig
 from repro.core import local_sgd as LS
 from repro.core.stl_sgd import StagewiseDriver
 from repro.data.synthetic import make_token_stream
+from repro.engine import algorithm_names
 from repro.launch.mesh import make_host_mesh
 from repro.utils.logging import get_logger
 
@@ -59,8 +60,7 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--algo", default="stl_sc",
-                    choices=["sync", "lb", "crpsgd", "local", "stl_sc",
-                             "stl_nc1", "stl_nc2"])
+                    choices=list(algorithm_names()))
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
