@@ -66,6 +66,54 @@ def comm_table(art_dir="artifacts/bench", pattern="BENCH_*.json"):
     return "\n".join(lines)
 
 
+def reducer_sweep_table(art_dir="artifacts/bench", pattern="BENCH_*.json"):
+    """Compose the rounds × bytes × modeled-time reducer sweep.
+
+    Pivots every BENCH artifact's rows over their ``reducer`` column: cells
+    that share all other identity columns (bench, algo, dataset, …) are one
+    sweep group, the dense run is its baseline, and each compressed reducer
+    reports its bytes/time ratios and final-objective drift against it —
+    the reporting half of the ROADMAP's "paper-scale reducer sweeps".
+    """
+    _ID_KEYS = ("dataset", "net", "dist", "algo", "mode", "slowdown")
+    _OBJ_KEYS = ("final_obj", "final_gap", "final_err", "gap")
+    groups = {}
+    for path in sorted(glob.glob(os.path.join(art_dir, pattern))):
+        rec = json.load(open(path))
+        for r in rec.get("rows", []):
+            if "comm_bytes" not in r or "reducer" not in r:
+                continue
+            cell = tuple((k, str(r[k])) for k in _ID_KEYS if k in r)
+            groups.setdefault((rec["bench"], cell), {})[r["reducer"]] = r
+
+    def _obj(r):
+        for k in _OBJ_KEYS:
+            if k in r:
+                return float(r[k])
+        return None
+
+    lines = ["| bench | cell | reducer | rounds | bytes | ×dense bytes | "
+             "time | ×dense time | obj drift |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (bench, cell), by_red in sorted(groups.items()):
+        base = by_red.get("dense")
+        if base is None or len(by_red) < 2:
+            continue
+        cell_s = " ".join(v for _, v in cell)
+        for red, r in by_red.items():
+            bx = float(base["comm_bytes"]) / max(float(r["comm_bytes"]), 1.0)
+            tx = (float(base["comm_time_s"])
+                  / max(float(r["comm_time_s"]), 1e-12))
+            o, ob = _obj(r), _obj(base)
+            drift = ("-" if o is None or ob is None or ob == 0.0
+                     else f"{abs(o - ob) / abs(ob) * 100:.2f}%")
+            lines.append(
+                f"| {bench} | {cell_s} | {red} | {r.get('rounds', '-')} "
+                f"| {_fmt_bytes(float(r['comm_bytes']))} | {bx:.1f}x "
+                f"| {float(r['comm_time_s']):.2f}s | {tx:.1f}x | {drift} |")
+    return "\n".join(lines)
+
+
 def roofline_table(art_dir="artifacts/dryrun", pattern="*singlepod.json"):
     lines = ["| arch | shape | program | compute s | memory s | collective s | "
              "dominant | MODEL_FLOPS | useful ratio | fits 16G | next lever |",
@@ -108,6 +156,8 @@ def main():
     print(roofline_table(pattern="*multipod.json"))
     print("\n\n### Communication cost (α–β model, BENCH trajectory)\n")
     print(comm_table())
+    print("\n\n### Reducer sweep — rounds × bytes × modeled time vs dense\n")
+    print(reducer_sweep_table())
 
 
 if __name__ == "__main__":

@@ -25,7 +25,9 @@ from repro.core import simulate
 from repro.data import make_binary_classification, partition_iid
 from repro.models import logreg
 
-ALGOS = ("sync", "local", "stl_sc", "stl_nc1")
+# "adaptive" is the divergence-triggered SyncPolicy (engine.AdaptivePeriod):
+# stl_sc's η_s/T_s schedule, rounds fired by the replica-divergence probe
+ALGOS = ("sync", "local", "stl_sc", "stl_nc1", "adaptive")
 REDUCERS = ("dense", "int8", "topk")
 
 # acceptance thresholds (also asserted by tests/test_comm.py)

@@ -14,6 +14,7 @@ from repro.comm.reducer import (
     DenseMean,
     QuantizedMean,
     Reducer,
+    StalenessWeightedMean,
     TopKMean,
     get_reducer,
 )
@@ -23,6 +24,7 @@ __all__ = [
     "NetworkModel",
     "QuantizedMean",
     "Reducer",
+    "StalenessWeightedMean",
     "TopKMean",
     "comm_summary",
     "comm_summary_for",

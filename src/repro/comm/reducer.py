@@ -215,12 +215,98 @@ class TopKMean(_DeltaReducer):
                    for l in jax.tree.leaves(template))
 
 
+@dataclass(frozen=True, repr=False)
+class StalenessWeightedMean(_DeltaReducer):
+    """Merge-on-arrival reducer for asynchronous rounds (repro.runtime).
+
+    The barrier-free analogue of the delta reducers above: each client still
+    uploads a (optionally int8-quantized, reusing the kernels behind
+    ``QuantizedMean``) error-feedback-corrected round delta, but the server
+    applies messages *as they arrive* instead of averaging a full cohort:
+
+        server' = server + w(τ)/N · deq(C(Δ_i + e_i))
+        w(τ)    = (1 + τ)^(-decay)
+
+    where the staleness τ counts *server cycles beyond the natural pipeline
+    lag*: in a steady barrier-free rotation every upload races the other
+    N−1 clients' merges, so the runtime reports
+    τ = max(0, merges_since_pull − (N−1)) / N — a client keeping pace
+    merges at full weight (async ≈ sync in the homogeneous limit), while a
+    straggler whose delta raced S extra full cycles is decayed by
+    (1+S)^(−decay).
+
+    The synchronous Reducer protocol (``reduce`` over a stacked cohort) is
+    also implemented — all clients at τ=0 — so the topology/cost plumbing
+    prices it like any other reducer; the per-message half (``encode`` /
+    ``merge``) is what the event runtime drives.
+    """
+
+    decay: float = 0.5
+    compress: str = "dense"   # "dense" | "int" (bits-wide quantization)
+    bits: int = 8
+    impl: str = "xla"
+    error_feedback: bool = True
+
+    @property
+    def name(self):
+        tag = "" if self.compress == "dense" else f"-int{self.bits}"
+        return f"staleness{tag}"
+
+    def weight(self, staleness: float) -> float:
+        """Merge weight for a message that is ``staleness`` cycles late."""
+        return (1.0 + max(0.0, float(staleness))) ** (-self.decay)
+
+    def _compress(self, y, rng):
+        if self.compress == "dense":
+            return y, jnp.mean(y, axis=0)
+        return QuantizedMean(bits=self.bits, impl=self.impl)._compress(y, rng)
+
+    # -- per-message async protocol (driven by repro.runtime) ---------------
+
+    def client_residual(self, template):
+        """Fresh per-client error-feedback residual (f32 zeros tree)."""
+        return jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32),
+                            template)
+
+    def encode(self, delta, residual, rng):
+        """One client's upload: compress (Δ + e).
+
+        Returns (payload, residual') where ``payload`` is the decompressed
+        f32 delta tree the server will apply and ``residual'`` carries what
+        the compressor dropped (zeros when error feedback is off).
+        """
+        leaves, treedef = jax.tree.flatten(delta)
+        res = treedef.flatten_up_to(residual)
+        payloads, new_res = [], []
+        for i, (d, e) in enumerate(zip(leaves, res)):
+            y = (d.astype(jnp.float32) + e).reshape(1, -1)
+            deq, _ = self._compress(y, jax.random.fold_in(rng, i))
+            p = deq.reshape(d.shape)
+            payloads.append(p)
+            new_res.append((y.reshape(e.shape) - p) if self.error_feedback
+                           else jnp.zeros_like(e))
+        return treedef.unflatten(payloads), treedef.unflatten(new_res)
+
+    def merge(self, server, payload, staleness: float, n_clients: int):
+        """Apply one arrived message to the server model."""
+        w = self.weight(staleness) / float(n_clients)
+        return jax.tree.map(lambda s, p: s + w * p.astype(s.dtype),
+                            server, payload)
+
+    def message_bytes(self, template) -> int:
+        if self.compress == "dense":
+            return sum(_leaf_elems(l) * 4 for l in jax.tree.leaves(template))
+        return sum(-(-_leaf_elems(l) * self.bits // 8) + 4
+                   for l in jax.tree.leaves(template))
+
+
 def get_reducer(spec, *, quant_bits: int = 8, topk_frac: float = 0.1,
-                impl: str = "xla") -> Reducer:
+                impl: str = "xla", staleness_decay: float = 0.5) -> Reducer:
     """Resolve a reducer from a config string (or pass a Reducer through).
 
     Accepted specs: "dense" | "int8" / "quant" (quant_bits-wide) |
-    "int<b>" (explicit width) | "topk" (topk_frac).
+    "int<b>" (explicit width) | "topk" (topk_frac) |
+    "staleness" / "staleness-int<b>" (async merge-on-arrival weights).
     """
     if isinstance(spec, Reducer):
         return spec
@@ -229,6 +315,12 @@ def get_reducer(spec, *, quant_bits: int = 8, topk_frac: float = 0.1,
     if spec in ("quant", "int8", "quantized"):
         b = 8 if spec == "int8" else quant_bits
         return QuantizedMean(bits=b, impl=impl)
+    if spec == "staleness":
+        return StalenessWeightedMean(decay=staleness_decay)
+    if spec.startswith("staleness-int"):
+        return StalenessWeightedMean(decay=staleness_decay, compress="int",
+                                     bits=int(spec[len("staleness-int"):]),
+                                     impl=impl)
     if spec.startswith("int"):
         return QuantizedMean(bits=int(spec[3:]), impl=impl)
     if spec == "topk":

@@ -150,3 +150,17 @@ class TrainConfig:
     topology: str = "star"
     n_pods: int = 2
     inter_reducer: str = "int8"
+    # discrete-event runtime (repro.runtime): heterogeneous clients + async.
+    # async_mode wraps cfg.algo in an AsyncPeriod policy — clients upload
+    # after k local steps without barriering and the server merges each
+    # message on arrival with weight (1 + staleness)^(-staleness_decay).
+    # Heterogeneity knobs feed the event clock: per-local-step compute time,
+    # straggler cohort (frac of clients slowed by slowdown×), lognormal
+    # per-client compute/network jitter, and per-upload dropout probability.
+    async_mode: bool = False
+    staleness_decay: float = 0.5
+    base_step_time_s: float = 1e-3
+    straggler_frac: float = 0.0
+    straggler_slowdown: float = 1.0
+    compute_jitter: float = 0.0
+    dropout_rate: float = 0.0

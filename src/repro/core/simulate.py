@@ -54,9 +54,43 @@ def _sample_batch(data, rng, batch: int):
     return jax.tree.map(lambda a: a[idx], data)
 
 
+def make_batch_weights(batch: int, grow: float, b0: int, max_batch: int):
+    """Per-example weight rule shared by every execution path.
+
+    grow ≤ 1: uniform 1/batch. grow > 1 (CR-PSGD): bt = min(max, b0·grow^t)
+    realised as a masked fixed-size buffer so compiled steps stay
+    shape-stable.
+    """
+
+    def batch_weights(t):
+        if grow <= 1.0:
+            return jnp.ones((batch,), jnp.float32) / batch
+        bt = jnp.minimum(float(max_batch), float(b0) * grow ** t)
+        bt = jnp.clip(jnp.round(bt), 1, batch)
+        mask = (jnp.arange(batch) < bt).astype(jnp.float32)
+        return mask / bt
+
+    return batch_weights
+
+
+def client_sgd_step(loss_fn, batch: int, momentum: float,
+                    p, m, d, rng, center, w, eta_t):
+    """One client's minibatch SGD(+momentum) step.
+
+    The single copy of the inner update math — the vmapped round, the
+    masked-dropout round, the adaptive probe step and the async client job
+    (repro.runtime) all call this, so the execution paths cannot drift.
+    """
+    b = _sample_batch(d, rng, batch)
+    g = jax.grad(lambda q: loss_fn(q, b, center, w))(p)
+    m2 = jax.tree.map(lambda mm, gg: momentum * mm + gg, m, g)
+    p2 = jax.tree.map(lambda pp, mm: pp - eta_t * mm, p, m2)
+    return p2, m2
+
+
 def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
                   lr_alpha: float, grow: float, b0: int, max_batch: int,
-                  reducer=None):
+                  reducer=None, masked: bool = False):
     """One communication round = k vmapped local steps + 1 reduced average.
 
     Returned fn: (carry, rng, data, center, eta) -> carry where
@@ -69,18 +103,21 @@ def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
     carry. Momentum is always dense-averaged: it never leaves the client in
     a real deployment, the average only mirrors Alg. 1's replica-consensus
     bookkeeping.
+
+    ``masked=True`` returns the dropout-aware variant (used by
+    ``repro.runtime.EventBackend``) taking a trailing (N,) bool mask:
+    inactive clients are frozen for the round's k local steps — they missed
+    their compute window — but the reduce still spans all N replicas, so a
+    dropped client contributes a zero delta (plus, under error-feedback
+    reducers, whatever residual it already carried, which keeps the EF
+    state convergent) and compressed/hierarchical topologies compose with
+    partial participation unchanged. One round body serves both variants;
+    the unmasked trace is bit-identical to the historical dense path.
     """
     reducer = reducer if reducer is not None else get_reducer(None)
+    batch_weights = make_batch_weights(batch, grow, b0, max_batch)
 
-    def batch_weights(t):
-        if grow <= 1.0:
-            return jnp.ones((batch,), jnp.float32) / batch
-        bt = jnp.minimum(float(max_batch), float(b0) * grow ** t)
-        bt = jnp.clip(jnp.round(bt), 1, batch)
-        mask = (jnp.arange(batch) < bt).astype(jnp.float32)
-        return mask / bt
-
-    def round_fn(carry, rng_r, data, center, eta):
+    def round_body(carry, rng_r, data, center, eta, mask):
         N = jax.tree.leaves(carry[0])[0].shape[0]
 
         def local_step(c, rng_t):
@@ -88,15 +125,22 @@ def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
             eta_t = eta / (1.0 + lr_alpha * t)
             w = batch_weights(t)
 
-            def client(p, m, d, rng):
-                b = _sample_batch(d, rng, batch)
-                g = jax.grad(lambda q: loss_fn(q, b, center, w))(p)
-                m2 = jax.tree.map(lambda mm, gg: momentum * mm + gg, m, g)
-                p2 = jax.tree.map(lambda pp, mm: pp - eta_t * mm, p, m2)
-                return p2, m2
+            def client(p, m, d, rng, active=None):
+                p2, m2 = client_sgd_step(loss_fn, batch, momentum, p, m, d,
+                                         rng, center, w, eta_t)
+                if active is None:
+                    return p2, m2
+                freeze = lambda new, old: jax.tree.map(
+                    lambda a, o: jnp.where(active, a, o), new, old)
+                return freeze(p2, p), freeze(m2, m)
 
             rngs = jax.random.split(rng_t, N)
-            params, mom = jax.vmap(client)(params, mom, data, rngs)
+            if mask is None:
+                params, mom = jax.vmap(
+                    lambda p, m, d, rng: client(p, m, d, rng)
+                )(params, mom, data, rngs)
+            else:
+                params, mom = jax.vmap(client)(params, mom, data, rngs, mask)
             return (params, mom, t + 1.0), None
 
         params, mom, t, comm = carry
@@ -108,7 +152,51 @@ def make_round_fn(loss_fn, *, k: int, batch: int, momentum: float,
         mom = tree_broadcast_leading(tree_mean_leading(mom), N)
         return (params, mom, t, comm)
 
-    return round_fn
+    if masked:
+        return round_body
+    return lambda carry, rng_r, data, center, eta: round_body(
+        carry, rng_r, data, center, eta, None)
+
+
+def make_local_step_fn(loss_fn, *, batch: int, momentum: float,
+                       lr_alpha: float, grow: float, b0: int, max_batch: int):
+    """One vmapped local step for all N clients, *no* communication.
+
+    The probe-granularity sibling of ``make_round_fn`` (same client math,
+    via ``client_sgd_step``), used by the divergence-triggered
+    ``AdaptivePeriod`` policy where the backend decides after every step
+    whether to run the round.
+    """
+    batch_weights = make_batch_weights(batch, grow, b0, max_batch)
+
+    def step_fn(params, mom, t, rng_t, data, center, eta):
+        N = jax.tree.leaves(params)[0].shape[0]
+        eta_t = eta / (1.0 + lr_alpha * t)
+        w = batch_weights(t)
+        rngs = jax.random.split(rng_t, N)
+        params, mom = jax.vmap(
+            lambda p, m, d, rng: client_sgd_step(
+                loss_fn, batch, momentum, p, m, d, rng, center, w, eta_t)
+        )(params, mom, data, rngs)
+        return params, mom, t + 1.0
+
+    return step_fn
+
+
+def replica_divergence(stacked):
+    """Relative replica spread: Σ_leaves mean_i ‖x_i − x̄‖² / (‖x̄‖² + ε).
+
+    The probe the AdaptivePeriod policy thresholds — zero right after a
+    round (replicas identical), growing with local drift.
+    """
+    mean = tree_mean_leading(stacked)
+    num = 0.0
+    den = 0.0
+    for x, m in zip(jax.tree.leaves(stacked), jax.tree.leaves(mean)):
+        d = x.astype(jnp.float32) - m[None].astype(jnp.float32)
+        num += jnp.mean(jnp.sum(d * d, axis=tuple(range(1, d.ndim))))
+        den += jnp.sum(m.astype(jnp.float32) ** 2)
+    return num / (den + 1e-12)
 
 
 class VmapSimulatorBackend:
@@ -179,7 +267,24 @@ class VmapSimulatorBackend:
             self._chunk_cache[key] = chunk_fn
         return self._chunk_cache[key]
 
+    def _sample_round_masks(self, n: int):
+        """Per-(round, client) participation masks for the next n rounds.
+
+        None (the default) means full participation and the unmasked chunk
+        function; ``repro.runtime.EventBackend`` overrides this (and
+        ``_chunk_fn``) to thread dropout masks through the rounds.
+        """
+        return None
+
     def run_stage(self, stage, engine: Engine) -> StageStatus:
+        policy = engine.algorithm.sync_policy
+        if getattr(policy, "asynchronous", False):
+            raise ValueError(
+                "asynchronous policies (barrier-free rounds) need the "
+                "event-driven backend: use repro.runtime.EventBackend / "
+                "runtime.run instead of the vmapped simulator")
+        if getattr(policy, "adaptive", False):
+            return self._run_stage_adaptive(stage, engine)
         k = stage.k
         chunk_fn = self._chunk_fn(engine, k, self.batch)
         # Non-prox algorithms have no center: pass None (an empty pytree) so
@@ -194,8 +299,13 @@ class VmapSimulatorBackend:
         while done_in_stage < n_rounds:
             n = min(self.chunk_rounds, n_rounds - done_in_stage)
             self.rng, sub = jax.random.split(self.rng)
-            carry, vals = chunk_fn(carry, sub, self.client_data, center,
-                                   stage.eta, n)
+            masks = self._sample_round_masks(n)
+            if masks is None:
+                carry, vals = chunk_fn(carry, sub, self.client_data, center,
+                                       stage.eta, n)
+            else:
+                carry, vals = chunk_fn(carry, sub, self.client_data, center,
+                                       stage.eta, jnp.asarray(masks), n)
             vals = list(map(float, vals))
             hit = None
             for j, v in enumerate(vals):
@@ -222,6 +332,80 @@ class VmapSimulatorBackend:
                 break
         self.params, self.mom, tg, self.comm_state = carry
         self.t_global = float(tg)
+        # steps-per-round breakdown for event-clock overlays (EventBackend)
+        self._last_round_steps = [k] * status.rounds
+        return status
+
+    # -- divergence-triggered periods (AdaptivePeriod) ----------------------
+
+    def _adaptive_fns(self, engine: Engine, b: int):
+        key = ("adaptive", b)
+        if key not in self._chunk_cache:
+            cfg = engine.cfg
+            step = make_local_step_fn(
+                self.wloss, batch=b, momentum=cfg.momentum,
+                lr_alpha=self.lr_alpha, grow=self.grow,
+                b0=cfg.batch_per_client, max_batch=cfg.max_batch)
+            topo = engine.topology
+
+            @jax.jit
+            def step_fn(params, mom, t, rng, data, center, eta):
+                params, mom, t = step(params, mom, t, rng, data, center, eta)
+                return params, mom, t, replica_divergence(params)
+
+            @jax.jit
+            def sync_fn(params, mom, comm, rng):
+                N = jax.tree.leaves(params)[0].shape[0]
+                consensus, comm = topo.reduce(params, comm, rng)
+                return (tree_broadcast_leading(consensus, N),
+                        tree_broadcast_leading(tree_mean_leading(mom), N),
+                        comm, consensus)
+
+            self._chunk_cache[key] = (step_fn, sync_fn)
+        return self._chunk_cache[key]
+
+    def _run_stage_adaptive(self, stage, engine: Engine) -> StageStatus:
+        """Probe-and-trigger loop: one vmapped local step at a time; the
+        round runs when replica divergence crosses the policy threshold, the
+        stage's k-cap is hit, or the stage ends."""
+        policy = engine.algorithm.sync_policy
+        step_fn, sync_fn = self._adaptive_fns(engine, self.batch)
+        center = tree_mean_leading(self.params) if self.use_prox else None
+
+        status = StageStatus()
+        self._last_round_steps = []
+        params, mom = self.params, self.mom
+        t = jnp.asarray(self.t_global, jnp.float32)
+        since_sync = 0
+        for it in range(stage.T):
+            self.rng, sub = jax.random.split(self.rng)
+            params, mom, t, div = step_fn(params, mom, t, sub,
+                                          self.client_data, center, stage.eta)
+            since_sync += 1
+            self.iters_done += 1
+            status.iters += 1
+            last = it == stage.T - 1
+            if not (last or since_sync >= stage.k
+                    or float(div) >= policy.threshold):
+                continue
+            params, mom, self.comm_state, consensus = sync_fn(
+                params, mom, self.comm_state,
+                jax.random.fold_in(sub, _COMM_SALT))
+            status.rounds += 1
+            self.rounds_done += 1
+            self._last_round_steps.append(since_sync)
+            since_sync = 0
+            v = float(self.eval_fn(consensus))
+            at_target = self.target is not None and v <= self.target
+            if self.rounds_done % self.eval_every == 0 or last or at_target:
+                self.history.append(Record(self.rounds_done, self.iters_done,
+                                           v))
+            if at_target or (self.max_rounds is not None
+                             and self.rounds_done >= self.max_rounds):
+                status.stop = True
+                break
+        self.params, self.mom = params, mom
+        self.t_global = float(t)
         return status
 
     def finish(self, engine: Engine) -> List[Record]:

@@ -150,6 +150,17 @@ class StagewiseDriver:
         self.net = NetworkModel(latency_s=tcfg.comm_latency_s,
                                 bandwidth_gbps=tcfg.comm_bandwidth_gbps)
         self.algorithm = get_algorithm(tcfg.algo)
+        policy = self.algorithm.sync_policy
+        if getattr(policy, "asynchronous", False) \
+                or getattr(policy, "adaptive", False):
+            # the driver's (train_step, sync_step) contract is a barriered
+            # fixed-schedule round; running these policies here would
+            # silently execute the wrong semantics under the right name
+            raise ValueError(
+                f"StagewiseDriver runs barriered fixed-schedule rounds; "
+                f"algorithm {self.algorithm.name!r} needs "
+                f"repro.runtime.EventBackend (async) or the vmapped "
+                f"simulator (adaptive)")
         self.stages = self.algorithm.stages(tcfg)
 
     def run(self, state: dict, batches, max_iters: Optional[int] = None

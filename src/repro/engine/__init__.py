@@ -9,10 +9,13 @@ from repro.engine.algorithm import (
     Algorithm,
     algorithm_names,
     get_algorithm,
+    make_async,
     register,
 )
 from repro.engine.engine import Engine, EngineReport, StageStatus, topology_for
 from repro.engine.policy import (
+    AdaptivePeriod,
+    AsyncPeriod,
     EveryStep,
     FixedPeriod,
     Stage,
@@ -35,7 +38,9 @@ from repro.engine.update import (
 )
 
 __all__ = [
+    "AdaptivePeriod",
     "Algorithm",
+    "AsyncPeriod",
     "Engine",
     "EngineReport",
     "EveryStep",
@@ -56,6 +61,7 @@ __all__ = [
     "algorithm_names",
     "get_algorithm",
     "get_topology",
+    "make_async",
     "register",
     "topology_for",
 ]

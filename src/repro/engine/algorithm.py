@@ -19,8 +19,12 @@ says ``algo="stl_sc"``:
   stl_nc2  STL-SGD^nc Opt. 2 (Alg. 3)   StagewiseLinear*     + SgdUpdate
                                         (* prox, re-centered per stage)
 
-``register`` is open: new methods (async rounds, adaptive periods) plug in
-without touching the engine or any front-end.
+``register`` is open: new methods plug in without touching the engine or
+any front-end. Two registry extensions ship with the runtime subsystem:
+
+  adaptive  divergence-triggered periods    AdaptivePeriod(StagewiseGeo)
+  <name>+async  any registered name wrapped in AsyncPeriod (barrier-free
+                merge-on-arrival rounds; executed by repro.runtime)
 """
 from __future__ import annotations
 
@@ -28,6 +32,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
 from repro.engine.policy import (
+    AdaptivePeriod,
+    AsyncPeriod,
     EveryStep,
     FixedPeriod,
     Stage,
@@ -75,15 +81,38 @@ def register(algorithm: Algorithm, *, overwrite: bool = False) -> Algorithm:
 
 
 def get_algorithm(name) -> Algorithm:
-    """Resolve an algorithm by registry name (Algorithm passes through)."""
+    """Resolve an algorithm by registry name (Algorithm passes through).
+
+    Any registered name composes with barrier-free merging via the
+    ``"<name>+async"`` suffix — e.g. ``get_algorithm("stl_sc+async")`` wraps
+    STL-SGD^sc's schedule in an ``AsyncPeriod`` policy (see ``make_async``).
+    """
     if isinstance(name, Algorithm):
         return name
+    if isinstance(name, str) and name.endswith("+async"):
+        return make_async(get_algorithm(name[: -len("+async")]))
     try:
         return _REGISTRY[name]
     except KeyError:
         raise ValueError(
             f"unknown algorithm: {name!r} (known: {algorithm_names()})"
         ) from None
+
+
+def make_async(algorithm) -> Algorithm:
+    """Wrap an Algorithm's SyncPolicy in ``AsyncPeriod`` (idempotent).
+
+    The schedule, local update and prox flag are preserved; only the round
+    semantics change from barriered average to merge-on-arrival. Executable
+    by ``repro.runtime.EventBackend`` only.
+    """
+    algo = get_algorithm(algorithm)
+    if algo.sync_policy.asynchronous:
+        return algo
+    return Algorithm(name=f"{algo.name}+async",
+                     sync_policy=AsyncPeriod(base=algo.sync_policy,
+                                             recenter=algo.sync_policy.recenter),
+                     local_update=algo.local_update, prox=algo.prox)
 
 
 def algorithm_names() -> Tuple[str, ...]:
@@ -97,3 +126,6 @@ register(Algorithm("local", FixedPeriod()))
 register(Algorithm("stl_sc", StagewiseGeometric()))
 register(Algorithm("stl_nc1", StagewiseGeometric(recenter=True), prox=True))
 register(Algorithm("stl_nc2", StagewiseLinear(recenter=True), prox=True))
+# divergence-triggered periods: stl_sc's η_s/T_s schedule, k_s chosen at
+# runtime by the replica-divergence probe (cap = the geometric k_s)
+register(Algorithm("adaptive", AdaptivePeriod()))

@@ -20,7 +20,7 @@ compatibility) so the engine layer has no dependency on ``repro.core``.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List
 
 
@@ -44,9 +44,18 @@ def k_growth(iid: bool, geometric: bool, s: int) -> float:
 class SyncPolicy:
     """Base protocol. ``recenter`` is the prox-center policy: True means the
     prox surrogate re-centers at the averaged params at each stage start
-    (Alg. 3); False means no center is ever produced."""
+    (Alg. 3); False means no center is ever produced.
+
+    Two class-level capability flags route execution:
+      ``asynchronous`` — rounds merge on arrival instead of barriering
+        (honoured by ``repro.runtime.EventBackend``);
+      ``adaptive`` — the k in each Stage is only a *cap*; the backend
+        triggers a round when replica divergence crosses ``threshold``.
+    """
 
     recenter: bool = False
+    asynchronous = False  # class attribute, not a schedule parameter
+    adaptive = False
 
     def stage(self, s: int, eta1: float, T1: int, k1: float,
               iid: bool) -> Stage:
@@ -98,3 +107,46 @@ class StagewiseLinear(SyncPolicy):
         kr = k1 * k_growth(iid, False, s)
         return Stage(s=s, eta=eta1 / s, T=T1 * s,
                      k=max(1, int(kr)), k_raw=kr)
+
+
+@dataclass(frozen=True)
+class AsyncPeriod(SyncPolicy):
+    """Barrier-free rounds: clients upload after k local steps *without*
+    waiting for each other; the server merges each message on arrival with
+    a staleness-decayed weight (``comm.StalenessWeightedMean``).
+
+    The (η_s, T_s, k_s) schedule is delegated to ``base`` — any existing
+    policy composes (``engine.make_async`` wraps a registered Algorithm), so
+    e.g. STL-SGD's growing k_s runs with asynchronous merging unchanged.
+    Only ``repro.runtime.EventBackend`` can execute the asynchronous
+    semantics; the barrier backends reject it.
+    """
+
+    base: SyncPolicy = field(default_factory=FixedPeriod)
+    asynchronous = True
+
+    def stage(self, s, eta1, T1, k1, iid):
+        return self.base.stage(s, eta1, T1, k1, iid)
+
+
+@dataclass(frozen=True)
+class AdaptivePeriod(SyncPolicy):
+    """Divergence-triggered rounds (ROADMAP "adaptive/learned periods").
+
+    η_s and T_s follow ``base``'s schedule; the Stage's k becomes a *cap*:
+    between rounds the backend probes the replica divergence
+
+        div = Σ_leaves mean_i ‖x_i − x̄‖² / (Σ_leaves ‖x̄‖² + ε)
+
+    after every local step and triggers the communication round as soon as
+    ``div ≥ threshold`` (or the cap is hit). Early stages sync often (large
+    η ⇒ fast divergence); late stages stretch the period automatically —
+    the data-driven analogue of the paper's hand-designed k_s growth.
+    """
+
+    base: SyncPolicy = field(default_factory=StagewiseGeometric)
+    threshold: float = 3e-4
+    adaptive = True
+
+    def stage(self, s, eta1, T1, k1, iid):
+        return self.base.stage(s, eta1, T1, k1, iid)

@@ -1,8 +1,11 @@
 from repro.kernels.quantize.ops import (
+    INT8_TILE,
+    check_tile_alignment,
     compute_scale,
     dequant_mean,
     qmax_for,
     quantize,
 )
 
-__all__ = ["compute_scale", "dequant_mean", "qmax_for", "quantize"]
+__all__ = ["INT8_TILE", "check_tile_alignment", "compute_scale",
+           "dequant_mean", "qmax_for", "quantize"]

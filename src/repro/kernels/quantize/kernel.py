@@ -28,6 +28,30 @@ from jax.experimental import pallas as pl
 
 _INV_2_32 = 1.0 / 4294967296.0
 
+# int8 arrays tile as (32, 128) on TPU (4× the f32 (8, 128) sublane
+# packing). Interpret mode happily runs any block shape, which would let
+# misaligned tilings hide until a compiled run — the kernels therefore
+# refuse blocks that don't pad the flat (rows, 128) view to whole tiles.
+# Single validator for every entry point (ops.py re-exports it).
+INT8_TILE = (32, 128)
+
+
+def check_tile_alignment(block: int) -> int:
+    """Validate a flat block size against the int8 (32, 128) TPU tile.
+
+    The kernels view their operands as (block/128, 128) lane blocks; int8
+    stores want the row count to be a multiple of 32, so ``block`` must be
+    a positive multiple of 32·128 = 4096 elements. Returns ``block``.
+    """
+    tile = INT8_TILE[0] * INT8_TILE[1]
+    if block <= 0 or block % tile:
+        raise ValueError(
+            f"quantize kernels tile int8 as {INT8_TILE}: block={block} must "
+            f"be a positive multiple of {tile} so padded inputs land on "
+            f"whole tiles (interpret mode would accept it; a compiled TPU "
+            f"run would not)")
+    return block
+
 
 def _quant_kernel(x_ref, r_ref, s_ref, q_ref, *, qmax):
     x = x_ref[...].astype(jnp.float32)
@@ -46,7 +70,7 @@ def quantize_kernel(x, rand_bits, scale, *, bits: int = 8,
     """
     qmax = float(2 ** (bits - 1) - 1)
     shape, n = x.shape, x.size
-    pad = (-n) % block
+    pad = (-n) % check_tile_alignment(block)
     flat = lambda a: jnp.pad(a.reshape(-1), (0, pad)).reshape(-1, 128)
     rows = (n + pad) // 128
     brows = block // 128
@@ -78,7 +102,7 @@ def dequant_mean_kernel(q, scales, *, bits: int = 8, block: int = 65536,
     N = q.shape[0]
     shape = q.shape[1:]
     n = q[0].size
-    pad = (-n) % block
+    pad = (-n) % check_tile_alignment(block)
     qf = jnp.pad(q.reshape(N, -1), ((0, 0), (0, pad))).reshape(N, -1, 128)
     rows = (n + pad) // 128
     brows = block // 128

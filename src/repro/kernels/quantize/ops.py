@@ -4,13 +4,23 @@
   "xla"       — pure-jnp oracle (fast on CPU, used inside the simulator)
   "interpret" — Pallas kernel, interpreter mode (CI / CPU parity)
   "pallas"    — Pallas kernel, compiled (TPU)
+
+The kernels refuse ``block`` sizes that don't pad the flat view to whole
+int8 (32, 128) TPU tiles — interpret mode would tolerate them, a compiled
+run would not. ``check_tile_alignment`` / ``INT8_TILE`` (re-exported from
+``kernel``) are the single validator every entry point shares.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.kernels.quantize import ref as R
-from repro.kernels.quantize.kernel import dequant_mean_kernel, quantize_kernel
+from repro.kernels.quantize.kernel import (
+    INT8_TILE,
+    check_tile_alignment,
+    dequant_mean_kernel,
+    quantize_kernel,
+)
 
 qmax_for = R.qmax_for
 
@@ -20,17 +30,19 @@ def compute_scale(x, *, eps: float = 1e-12):
     return jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), eps)
 
 
-def quantize(x, rand_bits, scale, *, bits: int = 8, impl: str = "xla"):
+def quantize(x, rand_bits, scale, *, bits: int = 8, impl: str = "xla",
+             block: int = 65536):
     """Stochastic-rounding quantize one leaf to int8 codes."""
     if impl == "xla":
         return R.quantize_ref(x, rand_bits, scale, bits=bits)
-    return quantize_kernel(x, rand_bits, scale, bits=bits,
+    return quantize_kernel(x, rand_bits, scale, bits=bits, block=block,
                            interpret=impl == "interpret")
 
 
-def dequant_mean(q, scales, *, bits: int = 8, impl: str = "xla"):
+def dequant_mean(q, scales, *, bits: int = 8, impl: str = "xla",
+                 block: int = 65536):
     """Fused dequantize + average of N stacked client messages."""
     if impl == "xla":
         return R.dequant_mean_ref(q, scales, bits=bits)
-    return dequant_mean_kernel(q, scales, bits=bits,
+    return dequant_mean_kernel(q, scales, bits=bits, block=block,
                                interpret=impl == "interpret")

@@ -1,0 +1,27 @@
+# Discrete-event heterogeneous-client runtime: a virtual clock + per-client
+# processes (sampled compute rates, α–β network draws, dropout) behind an
+# EventBackend that plugs into repro.engine.Engine.run exactly like the
+# vmapped simulator — synchronous policies replay barrier rounds on the
+# clock (bit-exact numerics), AsyncPeriod policies merge uploads on arrival
+# through comm.StalenessWeightedMean.
+from repro.runtime.client import ClientProcess, Heterogeneity, sample_clients
+from repro.runtime.clock import Clock, Event, EventQueue
+from repro.runtime.runtime import (
+    EventBackend,
+    RuntimeResult,
+    run,
+    staleness_reducer_for,
+)
+
+__all__ = [
+    "ClientProcess",
+    "Clock",
+    "Event",
+    "EventBackend",
+    "EventQueue",
+    "Heterogeneity",
+    "RuntimeResult",
+    "run",
+    "sample_clients",
+    "staleness_reducer_for",
+]

@@ -1,0 +1,471 @@
+"""EventBackend — discrete-event execution backend for heterogeneous clients.
+
+The third `Engine.run` backend (next to ``core.simulate.VmapSimulatorBackend``
+and ``core.stl_sgd.DriverBackend``): every client is a simulated process
+with its own compute rate and α–β uplink, and a virtual clock prices the
+run in *modeled wall-clock seconds* instead of round counts — the missing
+axis for comparing STL-SGD's growing k_s against asynchronous merging under
+stragglers.
+
+Two execution regimes, selected by the Algorithm's SyncPolicy:
+
+  synchronous (EveryStep / FixedPeriod / Stagewise* / AdaptivePeriod)
+      Numerics are *identical* to the vmapped simulator — with dropout
+      disabled the backend delegates stage execution to
+      ``VmapSimulatorBackend.run_stage`` unchanged, so the trajectory is
+      bit-exact with the golden engine traces. The event layer replays each
+      executed round on the clock: per-client compute-done and arrival
+      events, a barrier merge at the latest arrival (stragglers stretch
+      every round). With ``dropout > 0`` a per-(round, client) mask freezes
+      dropped clients for the round; the reduce still spans all N replicas
+      (a dropped client contributes a zero delta — error-feedback safe, and
+      composes with hierarchical topologies).
+
+  asynchronous (AsyncPeriod — ``engine.make_async`` / ``cfg.async_mode``)
+      No barrier: the stage's budget of N·T_s local steps is consumed
+      greedily. Each client loops pull → k local steps → upload; the server
+      merges each message on arrival through a
+      ``comm.StalenessWeightedMean`` reducer (staleness counted in server
+      cycles, error-feedback residuals per client, dense or int8 messages).
+      Fast clients contribute more steps; stragglers' late deltas are
+      staleness-decayed instead of stalling the cohort.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.cost import NetworkModel
+from repro.comm.reducer import StalenessWeightedMean, get_reducer
+from repro.configs.base import TrainConfig
+from repro.core.simulate import (
+    _COMM_SALT,
+    Record,
+    VmapSimulatorBackend,
+    client_sgd_step,
+    make_batch_weights,
+    make_round_fn,
+)
+from repro.engine.algorithm import get_algorithm, make_async
+from repro.engine.engine import Engine, StageStatus
+from repro.engine.topology import Star
+from repro.runtime.client import Heterogeneity, sample_clients
+from repro.runtime.clock import Clock, EventQueue
+from repro.utils.tree import tree_broadcast_leading, tree_mean_leading
+
+# numpy stream salt for the dropout draws (separate from the client sampler)
+_DROPOUT_SEED_SALT = 0x0D0D
+
+
+def staleness_reducer_for(cfg: TrainConfig, reducer=None) -> StalenessWeightedMean:
+    """Async merge reducer from a TrainConfig.
+
+    ``cfg.reducer`` (or the explicit ``reducer`` spec) picks the message
+    compression — dense f32 deltas or int<b> stochastic-rounding codes (the
+    same kernels as ``QuantizedMean``); ``cfg.staleness_decay`` sets the
+    (1+τ)^(−decay) merge weight. Top-k has no merge-on-arrival encoding.
+    Only the barrier-spec → staleness-spec mapping lives here; the spec
+    grammar itself is ``comm.get_reducer``'s.
+    """
+    spec = reducer if reducer is not None else cfg.reducer
+    if isinstance(spec, StalenessWeightedMean):
+        return spec
+    if spec in (None, "dense", "mean"):
+        spec = "staleness"
+    elif spec in ("quant", "quantized"):
+        spec = f"staleness-int{cfg.quant_bits}"
+    elif isinstance(spec, str) and spec.startswith("int"):
+        spec = f"staleness-{spec}"
+    if not (isinstance(spec, str) and spec.startswith("staleness")):
+        raise ValueError(
+            f"async rounds carry dense or int<b> messages, got "
+            f"reducer {spec!r}")
+    return get_reducer(spec, staleness_decay=cfg.staleness_decay,
+                       quant_bits=cfg.quant_bits)
+
+
+class EventBackend(VmapSimulatorBackend):
+    """Engine backend: simulated clients on a shared discrete-event clock.
+
+    Heterogeneity disabled ⇒ the synchronous path is bit-exact with
+    ``VmapSimulatorBackend`` (pinned against the PR 2 golden traces); the
+    clock then simply prices homogeneous barrier rounds. Extra attributes
+    after a run: ``clock.now`` (modeled seconds), ``trace`` (the event
+    log), ``timeline`` ((time_s, round, objective) samples).
+    """
+
+    def __init__(self, loss_fn, init_params, client_data, eval_fn, *,
+                 hetero: Optional[Heterogeneity] = None, merge_reducer=None,
+                 eval_every: int = 1, max_rounds: Optional[int] = None,
+                 target: Optional[float] = None, lr_alpha: float = 0.0,
+                 chunk_rounds: int = 32):
+        super().__init__(loss_fn, init_params, client_data, eval_fn,
+                         eval_every=eval_every, max_rounds=max_rounds,
+                         target=target, lr_alpha=lr_alpha,
+                         chunk_rounds=chunk_rounds)
+        self._hetero_arg = hetero
+        self._merge_arg = merge_reducer
+
+    # -- setup ---------------------------------------------------------------
+
+    def setup(self, engine: Engine):
+        super().setup(engine)
+        cfg = engine.cfg
+        self.N = jax.tree.leaves(self.client_data)[0].shape[0]
+        self.hetero = (self._hetero_arg if self._hetero_arg is not None
+                       else Heterogeneity.from_config(cfg))
+        net = NetworkModel(latency_s=cfg.comm_latency_s,
+                           bandwidth_gbps=cfg.comm_bandwidth_gbps)
+        self.clients = sample_clients(self.N, self.hetero, net)
+        self.clock = Clock()
+        self.queue = EventQueue()
+        self.trace: List[Tuple[float, str, int]] = []
+        self.timeline: List[Tuple[float, int, float]] = [
+            (0.0, 0, self.history[0].value)]
+        self._np = np.random.RandomState(
+            (self.hetero.seed + _DROPOUT_SEED_SALT) % (2 ** 31))
+        self._round_times: List[float] = []
+        self._stage_masks: List[np.ndarray] = []
+        self.asynchronous = bool(
+            getattr(engine.algorithm.sync_policy, "asynchronous", False))
+
+        topo = engine.topology
+        first_hop = getattr(topo, "reducer", None) or getattr(topo, "intra",
+                                                              None)
+        self._msg_bytes = first_hop.message_bytes(self.init_params)
+        hops = topo.hop_costs(self.init_params, self.N)
+        self._extra_hop_time = sum(h.time_s for h in hops[1:])
+
+        if self.asynchronous:
+            red = self._merge_arg
+            if red is None and isinstance(first_hop, StalenessWeightedMean):
+                red = first_hop
+            if red is None:
+                red = staleness_reducer_for(cfg)
+            self.merge_reducer: StalenessWeightedMean = red
+            self._msg_bytes = red.message_bytes(self.init_params)
+            # one merge = one client upload: re-price the engine ledger
+            # per-message (the event clock owns end-to-end wall time)
+            engine.set_cost_basis(self.init_params, 1)
+            # the async path keeps per-client EF residuals (_c_res); the
+            # stacked topology state super().setup() built would otherwise
+            # pin ~N+1 unused model copies for the whole run
+            self.comm_state = None
+            self.server = self.init_params
+            self.server_version = 0
+            self._c_data = [jax.tree.map(lambda a: a[i], self.client_data)
+                            for i in range(self.N)]
+            self._c_params = [self.server] * self.N
+            self._c_mom = [jax.tree.map(jnp.zeros_like, self.server)
+                           for _ in range(self.N)]
+            self._c_res = [red.client_residual(self.server)
+                           for _ in range(self.N)]
+            self._c_t = [jnp.zeros((), jnp.float32) for _ in range(self.N)]
+
+    # -- synchronous regime --------------------------------------------------
+
+    def run_stage(self, stage, engine: Engine) -> StageStatus:
+        if self.asynchronous:
+            return self._run_stage_async(stage, engine)
+        if self.hetero.dropout > 0.0 \
+                and getattr(engine.algorithm.sync_policy, "adaptive", False):
+            raise ValueError(
+                "AdaptivePeriod's divergence probe assumes full "
+                "participation; dropout composes with the fixed-period "
+                "policies and the async runtime only")
+        hist_mark = len(self.history)
+        self._stage_masks = []
+        # the parent runs the stage; dropout (if any) threads through via
+        # the _chunk_fn/_sample_round_masks overrides below
+        status = super().run_stage(stage, engine)
+        if not self._stage_masks:  # full participation
+            self._stage_masks = [np.ones(self.N, dtype=bool)
+                                 for _ in self._last_round_steps]
+        self._replay_rounds(self._last_round_steps, self._stage_masks)
+        for rec in self.history[hist_mark:]:
+            if rec.round >= 1:
+                self.timeline.append(
+                    (self._round_times[rec.round - 1], rec.round, rec.value))
+        return status
+
+    def _replay_rounds(self, round_steps: List[int], masks: List[np.ndarray]):
+        """Advance the event clock over the executed barrier rounds.
+
+        A dropped client skipped its local compute window but still answers
+        the barrier with its zero-delta message (matching the masked round
+        numerics), so it schedules an upload-only arrival.
+        """
+        for kk, mask in zip(round_steps, masks):
+            start = self.clock.now
+            for c in self.clients:
+                if mask[c.cid]:
+                    done = start + c.compute_time(kk)
+                    self.queue.push(done, "compute_done", c.cid)
+                    self.queue.push(done + c.upload_time(self._msg_bytes),
+                                    "arrival", c.cid)
+                else:
+                    self.trace.append((start, "dropout", c.cid))
+                    self.queue.push(start + c.upload_time(self._msg_bytes),
+                                    "arrival", c.cid)
+            merge_t = start
+            while self.queue:
+                ev = self.queue.pop()
+                self.clock.advance(ev.time)
+                self.trace.append((ev.time, ev.kind, ev.client))
+                merge_t = max(merge_t, ev.time)
+            merge_t += self._extra_hop_time
+            self.clock.advance(merge_t)
+            self.trace.append((merge_t, "merge", -1))
+            self._round_times.append(merge_t)
+
+    def _sample_round_masks(self, n: int):
+        """Dropout masks for the parent's next n rounds (None = no dropout).
+
+        Sampled from the backend's seeded numpy stream in execution order,
+        so the masks — and therefore the trace and the trajectory — are a
+        pure function of (config, seed).
+        """
+        if self.asynchronous or self.hetero.dropout <= 0.0:
+            return None
+        masks = self._np.random_sample((n, self.N)) >= self.hetero.dropout
+        self._stage_masks.extend(masks)
+        return masks
+
+    def _chunk_fn(self, engine: Engine, k: int, b: int):
+        """With dropout active, chunk through the mask-threaded round fn."""
+        if self.asynchronous or self.hetero.dropout <= 0.0:
+            return super()._chunk_fn(engine, k, b)
+        key = ("masked", k, b)
+        if key not in self._chunk_cache:
+            cfg = engine.cfg
+            round_fn = make_round_fn(
+                self.wloss, k=k, batch=b, momentum=cfg.momentum,
+                lr_alpha=self.lr_alpha, grow=self.grow,
+                b0=cfg.batch_per_client, max_batch=cfg.max_batch,
+                reducer=engine.topology, masked=True)
+            eval_fn = self.eval_fn
+
+            @partial(jax.jit, static_argnames=("n",))
+            def chunk_fn(carry, rng_c, data, ctr, eta, masks, n):
+                def body(c, xs):
+                    rng_r, mask = xs
+                    c = round_fn(c, rng_r, data, ctr, eta, mask)
+                    return c, eval_fn(tree_mean_leading(c[0]))
+                return jax.lax.scan(
+                    body, carry, (jax.random.split(rng_c, n), masks))
+
+            self._chunk_cache[key] = chunk_fn
+        return self._chunk_cache[key]
+
+    # -- asynchronous regime -------------------------------------------------
+
+    def _job_fn(self, engine: Engine, kk: int, b: int):
+        """k local steps for ONE client (no leading axis), jit per (k, b)."""
+        key = ("job", kk, b)
+        if key not in self._chunk_cache:
+            cfg = engine.cfg
+            wloss = self.wloss
+            momentum, lr_alpha = cfg.momentum, self.lr_alpha
+            batch_weights = make_batch_weights(b, self.grow,
+                                               cfg.batch_per_client,
+                                               cfg.max_batch)
+
+            @jax.jit
+            def job(params, mom, t, rng, data, center, eta):
+                def step(c, r):
+                    p, m, tt = c
+                    eta_t = eta / (1.0 + lr_alpha * tt)
+                    w = batch_weights(tt)
+                    p2, m2 = client_sgd_step(wloss, b, momentum, p, m, data,
+                                             r, center, w, eta_t)
+                    return (p2, m2, tt + 1.0), None
+
+                (params, mom, t), _ = jax.lax.scan(
+                    step, (params, mom, t), jax.random.split(rng, kk))
+                return params, mom, t
+
+            self._chunk_cache[key] = job
+        return self._chunk_cache[key]
+
+    def _run_stage_async(self, stage, engine: Engine) -> StageStatus:
+        """Barrier-free stage: budget = N·T_s local steps consumed greedily;
+        the server merges each upload on arrival with staleness weights.
+        Stage boundaries are the only barriers (η_s changes, prox re-centers,
+        every client re-pulls the server model)."""
+        red = self.merge_reducer
+        status = StageStatus()
+        hist_mark = len(self.history)
+        # stage-start barrier: everyone pulls the current server model
+        for i in range(self.N):
+            self._c_params[i] = self.server
+        center = self.server if self.use_prox else None
+        budget = self.N * stage.T
+        inflight: dict = {}        # cid -> (kk, rng, pulled_version, ref | payload)
+        stopping = False
+
+        def dispatch(cid: int):
+            nonlocal budget
+            kk = min(stage.k, budget)
+            if kk <= 0 or stopping:
+                return
+            budget -= kk
+            self.rng, sub = jax.random.split(self.rng)
+            c = self.clients[cid]
+            inflight[cid] = (kk, sub, self.server_version,
+                             self._c_params[cid])
+            self.queue.push(self.clock.now + c.compute_time(kk),
+                            "compute_done", cid)
+
+        def record(now: float, v: float):
+            self.history.append(Record(self.rounds_done, self.iters_done, v))
+            self.timeline.append((now, self.rounds_done, v))
+
+        for cid in range(self.N):
+            dispatch(cid)
+
+        while self.queue:
+            ev = self.queue.pop()
+            now = self.clock.advance(ev.time)
+            self.trace.append((ev.time, ev.kind, ev.client))
+            cid = ev.client
+            c = self.clients[cid]
+            if ev.kind == "compute_done":
+                kk, sub, v_pull, ref = inflight.pop(cid)
+                job = self._job_fn(engine, kk, self.batch)
+                pre_mom, pre_t = self._c_mom[cid], self._c_t[cid]
+                self._c_params[cid], self._c_mom[cid], self._c_t[cid] = job(
+                    self._c_params[cid], self._c_mom[cid], self._c_t[cid],
+                    sub, self._c_data[cid], center, stage.eta)
+                self.iters_done += kk
+                status.iters += kk
+                if self.hetero.dropout > 0.0 \
+                        and self._np.random_sample() < self.hetero.dropout:
+                    # upload lost: the whole job is discarded — params back
+                    # to the server pull, momentum and schedule index back
+                    # to their pre-job values (the steps count as wasted
+                    # compute in the ledger, not as optimizer progress)
+                    self.trace.append((now, "drop", cid))
+                    self._c_params[cid] = self.server
+                    self._c_mom[cid], self._c_t[cid] = pre_mom, pre_t
+                    dispatch(cid)
+                    continue
+                delta = jax.tree.map(
+                    lambda p, r: p.astype(jnp.float32) - r.astype(jnp.float32),
+                    self._c_params[cid], ref)
+                payload, self._c_res[cid] = red.encode(
+                    delta, self._c_res[cid],
+                    jax.random.fold_in(sub, _COMM_SALT))
+                inflight[cid] = (kk, v_pull, payload)
+                self.queue.push(now + c.upload_time(self._msg_bytes),
+                                "arrival", cid)
+            elif ev.kind == "arrival":
+                kk, v_pull, payload = inflight.pop(cid)
+                # cycles beyond the natural pipeline lag: racing the other
+                # N-1 clients' merges once is keeping pace, not staleness
+                staleness = max(
+                    0, self.server_version - v_pull - (self.N - 1)) / self.N
+                self.server = red.merge(self.server, payload, staleness,
+                                        self.N)
+                self.server_version += 1
+                status.rounds += 1
+                self.rounds_done += 1
+                self._round_times.append(now)
+                # target-hunting evaluates every merge (matching the sync
+                # backend's per-round check); otherwise only the recorded
+                # eval_every-th merges pay for an eval
+                if not stopping and (self.target is not None
+                                     or self.rounds_done
+                                     % self.eval_every == 0):
+                    v = float(self.eval_fn(self.server))
+                    at_target = self.target is not None and v <= self.target
+                    if at_target or self.rounds_done % self.eval_every == 0:
+                        record(now, v)
+                    if at_target:
+                        stopping = True
+                        status.stop = True
+                if self.max_rounds is not None \
+                        and self.rounds_done >= self.max_rounds:
+                    stopping = True
+                    status.stop = True
+                self._c_params[cid] = self.server
+                dispatch(cid)
+
+        # stage-end barrier: drain done above; record the closing objective
+        v = float(self.eval_fn(self.server))
+        if not self.history[hist_mark:] \
+                or self.history[-1].round != self.rounds_done:
+            record(self.clock.now, v)
+        if self.target is not None and v <= self.target:
+            status.stop = True
+        # keep the stacked view coherent for finish()/cross-stage consumers
+        self.params = tree_broadcast_leading(self.server, self.N)
+        return status
+
+
+@dataclass
+class RuntimeResult:
+    """What a discrete-event run produced, numerics and clock together."""
+
+    history: List[Record]              # (round, iteration, objective) trace
+    wall_clock_s: float                # modeled end-to-end wall time
+    rounds: int
+    iters: int
+    comm_bytes: int                    # engine ledger (modeled payload bytes)
+    comm_time_s: float                 # engine ledger (serial α–β link time)
+    timeline: List[Tuple[float, int, float]]  # (time_s, round, objective)
+    trace: List[Tuple[float, str, int]]       # full event log
+    params: Any = None                 # final consensus / server model
+
+
+def run(loss_fn, init_params, client_data, cfg: TrainConfig, eval_fn, *,
+        eval_every: int = 1, max_rounds: Optional[int] = None,
+        target: Optional[float] = None, lr_alpha: float = 0.0,
+        chunk_rounds: int = 32, reducer=None, topology=None,
+        hetero: Optional[Heterogeneity] = None) -> RuntimeResult:
+    """Run ``cfg.algo`` on the event runtime; the ``simulate.run`` of clocks.
+
+    Same problem signature as ``core.simulate.run``. ``cfg.async_mode``
+    (or an ``algo`` name carrying the ``+async`` suffix) switches to
+    barrier-free merge-on-arrival rounds; the heterogeneity profile comes
+    from the TrainConfig runtime fields unless ``hetero`` overrides it.
+    With heterogeneity disabled and a synchronous policy, ``.history`` is
+    bit-exact with ``simulate.run``.
+    """
+    algo = get_algorithm(cfg.algo)
+    if cfg.async_mode:
+        algo = make_async(algo)
+    if algo.sync_policy.asynchronous:
+        if topology is not None:
+            raise ValueError(
+                "asynchronous merging builds its own "
+                "Star(StalenessWeightedMean); configure the messages via "
+                "reducer=/cfg fields instead of passing topology=")
+        if getattr(cfg, "topology", "star") not in (None, "star", "flat"):
+            raise ValueError(
+                "asynchronous merging is a flat star protocol; "
+                f"topology={cfg.topology!r} only composes with barrier rounds")
+        merge_red = staleness_reducer_for(cfg, reducer)
+        net = NetworkModel(latency_s=cfg.comm_latency_s,
+                           bandwidth_gbps=cfg.comm_bandwidth_gbps)
+        engine = Engine(algo, cfg, topology=Star(reducer=merge_red,
+                                                 network=net))
+    else:
+        engine = Engine(algo, cfg, topology=topology, reducer=reducer)
+    backend = EventBackend(loss_fn, init_params, client_data, eval_fn,
+                           hetero=hetero, eval_every=eval_every,
+                           max_rounds=max_rounds, target=target,
+                           lr_alpha=lr_alpha, chunk_rounds=chunk_rounds)
+    history = engine.run(backend)
+    final = (backend.server if backend.asynchronous
+             else tree_mean_leading(backend.params))
+    return RuntimeResult(
+        history=history, wall_clock_s=backend.clock.now,
+        rounds=engine.report.rounds_total, iters=engine.report.iters_total,
+        comm_bytes=engine.report.comm_bytes_total,
+        comm_time_s=engine.report.comm_time_s,
+        timeline=backend.timeline, trace=backend.trace, params=final)

@@ -30,7 +30,12 @@ from repro.configs.base import TrainConfig
 from repro.core import local_sgd as LS
 from repro.core import simulate
 from repro.data import make_binary_classification, partition_iid
-from repro.kernels.quantize import compute_scale, dequant_mean, quantize
+from repro.kernels.quantize import (
+    check_tile_alignment,
+    compute_scale,
+    dequant_mean,
+    quantize,
+)
 from repro.models import logreg
 from repro.utils.tree import tree_broadcast_leading, tree_mean_leading
 
@@ -206,6 +211,48 @@ def test_quantized_mean_interpret_impl_matches_xla():
                     jax.tree.leaves(out["interpret"])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(5,), (33, 7), (257,), (100,)])
+def test_quantize_kernel_misaligned_shapes_pad_to_int8_tile(shape):
+    """Regression: inputs that don't fill a (32, 128) int8 tile are padded,
+    not silently mis-tiled — and remain bit-exact with the oracle. A small
+    custom block exercises the padding path rather than hiding behind the
+    64K default."""
+    x = jax.random.normal(jax.random.key(0), shape, jnp.float32)
+    rbits = jax.random.bits(jax.random.key(1), shape, jnp.uint32)
+    s = compute_scale(x)
+    q_ref = quantize(x, rbits, s, impl="xla")
+    q_ker = quantize(x, rbits, s, impl="interpret", block=4096)
+    assert q_ker.shape == shape
+    np.testing.assert_array_equal(np.asarray(q_ref), np.asarray(q_ker))
+    N = 3
+    xs = jnp.stack([x.reshape(-1)] * N) + jnp.arange(N)[:, None] * 0.1
+    rb = jax.random.bits(jax.random.key(2), xs.shape, jnp.uint32)
+    scales = jnp.max(jnp.abs(xs), axis=1)
+    q = jnp.stack([quantize(xs[i], rb[i], scales[i]) for i in range(N)])
+    m_ref = dequant_mean(q, scales, impl="xla")
+    m_ker = dequant_mean(q, scales, impl="interpret", block=4096)
+    np.testing.assert_allclose(np.asarray(m_ref), np.asarray(m_ker),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_quantize_kernel_rejects_misaligned_block():
+    """Blocks that don't pad to whole (32, 128) int8 tiles must raise in
+    every kernel mode instead of relying on interpret-mode leniency."""
+    x = jax.random.normal(jax.random.key(0), (100,), jnp.float32)
+    rbits = jax.random.bits(jax.random.key(1), (100,), jnp.uint32)
+    s = compute_scale(x)
+    assert check_tile_alignment(4096) == 4096
+    assert check_tile_alignment(65536) == 65536
+    for bad in (128, 1000, 4095, 4097, 0, -4096):
+        with pytest.raises(ValueError):
+            check_tile_alignment(bad)
+        with pytest.raises(ValueError):
+            quantize(x, rbits, s, impl="interpret", block=bad)
+    with pytest.raises(ValueError):
+        dequant_mean(jnp.zeros((2, 100), jnp.int8), jnp.ones((2,)),
+                     impl="interpret", block=129)
 
 
 # ---------------------------------------------------------------------------
