@@ -17,6 +17,7 @@ from repro.comm.reducer import (
     StalenessWeightedMean,
     TopKMean,
     get_reducer,
+    reduce_streaming,
 )
 
 __all__ = [
@@ -31,6 +32,7 @@ __all__ = [
     "dense_bytes",
     "get_reducer",
     "link_model",
+    "reduce_streaming",
     "round_bytes",
     "round_time",
 ]

@@ -31,16 +31,24 @@ import jax.numpy as jnp
 
 @dataclass(frozen=True)
 class NetworkModel:
+    """One α–β link: ``latency_s`` is the fixed per-message cost α in
+    seconds (setup, barrier), ``bandwidth_gbps`` the serialization rate
+    β⁻¹ in Gbit/s. ``count_downlink=True`` additionally bills the dense
+    server broadcast (excluded by default: multicast, reducer-independent).
+    All times this model produces are modeled seconds, all payloads bytes.
+    """
+
     latency_s: float = 5e-3          # alpha: fixed per-round cost
     bandwidth_gbps: float = 1.0      # beta^-1: link bandwidth, Gbit/s
     count_downlink: bool = False
 
     @property
     def bandwidth_Bps(self) -> float:
+        """Link bandwidth in bytes/second (Gbit/s × 1e9 / 8)."""
         return self.bandwidth_gbps * 1e9 / 8.0
 
     def time(self, n_bytes: float) -> float:
-        """alpha-beta cost of moving n_bytes over this link."""
+        """α–β cost in modeled seconds of moving ``n_bytes`` bytes."""
         return self.latency_s + n_bytes / self.bandwidth_Bps
 
 
@@ -78,7 +86,9 @@ def dense_bytes(template) -> int:
 
 def round_bytes(reducer, template, n_clients: int,
                 model: NetworkModel | None = None) -> int:
-    """Modeled bytes moved in one communication round."""
+    """Modeled payload bytes one communication round moves: ``n_clients``
+    compressed uplink messages (``reducer.message_bytes``, bytes), plus
+    — only when the model counts it — the dense downlink broadcast."""
     model = model or NetworkModel()
     up = n_clients * reducer.message_bytes(template)
     if model.count_downlink:
@@ -87,7 +97,8 @@ def round_bytes(reducer, template, n_clients: int,
 
 
 def round_time(model: NetworkModel, n_bytes: int) -> float:
-    """alpha-beta cost of one round carrying n_bytes."""
+    """Serial α–β cost in modeled seconds of one round carrying
+    ``n_bytes`` bytes: one latency α plus serialization at β."""
     return model.latency_s + n_bytes / model.bandwidth_Bps
 
 

@@ -40,7 +40,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.quantize import ops as Q
-from repro.kernels.quantize import ref as QR
 from repro.utils.tree import tree_mean_leading
 
 _EPS = 1e-12
@@ -54,7 +53,12 @@ def _leaf_elems(leaf) -> int:
 
 
 class Reducer:
-    """Base protocol. Subclasses override reduce() and message_bytes()."""
+    """Base protocol. Subclasses override the tree-level ``reduce()`` and the
+    per-leaf byte accounting (``leaf_message_bytes``); the per-leaf reduce
+    protocol (``split_state`` / ``reduce_leaf`` / ``join_state``) is what the
+    streaming execution paths (``engine.StreamingStar``,
+    ``local_sgd.build_sync_step(streaming=True)``) drive — leaf by leaf, same
+    numerics as the tree-level call."""
 
     name = "base"
 
@@ -73,9 +77,46 @@ class Reducer:
         """
         raise NotImplementedError
 
-    def message_bytes(self, template) -> int:
-        """Compressed uplink bytes one client sends per round."""
+    # -- per-leaf protocol (streaming reduce) -------------------------------
+
+    def split_state(self, state, treedef):
+        """Split the reducer state into one per-leaf slice.
+
+        ``treedef`` is the stacked replica tree's structure; the returned
+        list is index-aligned with ``jax.tree.flatten(stacked)[0]``. The
+        base (stateless) implementation yields ``None`` per leaf.
+        """
+        return [None] * treedef.num_leaves
+
+    def join_state(self, leaf_states, treedef) -> "object":
+        """Inverse of ``split_state``: rebuild the tree-level state."""
+        return None
+
+    def reduce_leaf(self, x, leaf_state, rng):
+        """Reduce ONE stacked (N, ...) leaf -> (consensus leaf, new state).
+
+        Leaves are independent, so calling this per leaf — in any order,
+        with the same per-leaf rng the tree-level ``reduce`` would fold —
+        is bit-exact with one tree-level call. This is the unit the
+        streaming paths interleave with per-leaf compute.
+        """
         raise NotImplementedError
+
+    # -- byte accounting ----------------------------------------------------
+
+    def leaf_message_bytes(self, template) -> list:
+        """Per-leaf compressed uplink payload, in bytes, one client sends
+        per round — index-aligned with ``jax.tree.leaves(template)``. The
+        per-leaf comm ledger (``engine.Topology.leaf_costs``) and the
+        streaming upload schedule (``runtime.StreamingSchedule``) consume
+        this; ``message_bytes`` is its sum, so the two views reconcile
+        bit-exactly by construction.
+        """
+        raise NotImplementedError
+
+    def message_bytes(self, template) -> int:
+        """Total compressed uplink bytes one client sends per round."""
+        return sum(self.leaf_message_bytes(template))
 
     def __repr__(self):
         return f"{type(self).__name__}()"
@@ -90,9 +131,18 @@ class DenseMean(Reducer):
     def reduce(self, stacked, state, rng):
         return tree_mean_leading(stacked), state
 
-    def message_bytes(self, template) -> int:
-        return sum(_leaf_elems(l) * jnp.dtype(l.dtype).itemsize
-                   for l in jax.tree.leaves(template))
+    # split_state / join_state: inherited stateless base implementations
+
+    def reduce_leaf(self, x, leaf_state, rng):
+        """Mean over the leading client axis of one leaf — the exact op
+        ``tree_mean_leading`` applies per leaf, so per-leaf streaming is
+        bit-exact with the tree-level average."""
+        return jnp.mean(x, axis=0), leaf_state
+
+    def leaf_message_bytes(self, template) -> list:
+        """Raw leaf payloads: elements × itemsize bytes per leaf."""
+        return [_leaf_elems(l) * jnp.dtype(l.dtype).itemsize
+                for l in jax.tree.leaves(template)]
 
 
 class _DeltaReducer(Reducer):
@@ -114,25 +164,39 @@ class _DeltaReducer(Reducer):
                 lambda x: jnp.zeros(x.shape, jnp.float32), stacked),
         }
 
-    def reduce(self, stacked, state, rng):
-        leaves, treedef = jax.tree.flatten(stacked)
+    def split_state(self, state, treedef):
         refs = treedef.flatten_up_to(state["ref"])
         res = treedef.flatten_up_to(state["res"])
-        means, new_refs, new_res = [], [], []
-        for i, (x, r, e) in enumerate(zip(leaves, refs, res)):
-            n = x.shape[0]
-            y = (x.astype(jnp.float32).reshape(n, -1)
-                 - r.reshape(1, -1) + e.reshape(n, -1))
-            deq, mean_delta = self._compress(
-                y, jax.random.fold_in(rng, i))
-            consensus = r.reshape(-1) + mean_delta
-            means.append(consensus.reshape(r.shape).astype(x.dtype))
-            new_refs.append(consensus.reshape(r.shape))
-            drop = (y - deq) if self.error_feedback else jnp.zeros_like(y)
-            new_res.append(drop.reshape(e.shape))
-        return (treedef.unflatten(means),
-                {"ref": treedef.unflatten(new_refs),
-                 "res": treedef.unflatten(new_res)})
+        return [{"ref": r, "res": e} for r, e in zip(refs, res)]
+
+    def join_state(self, leaf_states, treedef):
+        return {"ref": treedef.unflatten([s["ref"] for s in leaf_states]),
+                "res": treedef.unflatten([s["res"] for s in leaf_states])}
+
+    def reduce_leaf(self, x, leaf_state, rng):
+        """One leaf's EF round: compress (delta + residual), average, carry
+        the compression error forward. Same op order as the historical
+        tree-level loop body, so per-leaf streaming is bit-exact."""
+        r, e = leaf_state["ref"], leaf_state["res"]
+        n = x.shape[0]
+        y = (x.astype(jnp.float32).reshape(n, -1)
+             - r.reshape(1, -1) + e.reshape(n, -1))
+        deq, mean_delta = self._compress(y, rng)
+        consensus = r.reshape(-1) + mean_delta
+        drop = (y - deq) if self.error_feedback else jnp.zeros_like(y)
+        return (consensus.reshape(r.shape).astype(x.dtype),
+                {"ref": consensus.reshape(r.shape),
+                 "res": drop.reshape(e.shape)})
+
+    def reduce(self, stacked, state, rng):
+        leaves, treedef = jax.tree.flatten(stacked)
+        states = self.split_state(state, treedef)
+        means, new_states = [], []
+        for i, (x, st) in enumerate(zip(leaves, states)):
+            consensus, ns = self.reduce_leaf(x, st, jax.random.fold_in(rng, i))
+            means.append(consensus)
+            new_states.append(ns)
+        return treedef.unflatten(means), self.join_state(new_states, treedef)
 
 
 @dataclass(frozen=True, repr=False)
@@ -158,28 +222,22 @@ class QuantizedMean(_DeltaReducer):
         return f"int{self.bits}" + ("" if self.error_feedback else "-noef")
 
     def _compress(self, y, rng):
-        n = y.shape[0]
-        qmax = QR.qmax_for(self.bits)
         scales = jnp.maximum(jnp.max(jnp.abs(y), axis=1), _EPS)
         if self.stochastic:
             rbits = jax.random.bits(rng, y.shape, jnp.uint32)
         else:
             rbits = jnp.full(y.shape, 1 << 31, jnp.uint32)  # u = 0.5
-        if self.impl == "xla":
-            q = QR.quantize_ref(y, rbits, scales[:, None], bits=self.bits)
-            mean = QR.dequant_mean_ref(q, scales, bits=self.bits)
-        else:
-            q = jnp.stack([
-                Q.quantize(y[j], rbits[j], scales[j], bits=self.bits,
-                           impl=self.impl) for j in range(n)])
-            mean = Q.dequant_mean(q, scales, bits=self.bits, impl=self.impl)
-        deq = q.astype(jnp.float32) * (scales[:, None] / qmax)
+        # the per-leaf kernel path: one self-contained encode/decode per
+        # leaf, so streaming rounds can pipeline it against other leaves
+        q = Q.encode_leaf(y, rbits, scales, bits=self.bits, impl=self.impl)
+        deq, mean = Q.decode_mean_leaf(q, scales, bits=self.bits,
+                                       impl=self.impl)
         return deq, mean
 
-    def message_bytes(self, template) -> int:
+    def leaf_message_bytes(self, template) -> list:
         # bits-wide codes (packed) + one f32 scale per leaf
-        return sum(-(-_leaf_elems(l) * self.bits // 8) + 4
-                   for l in jax.tree.leaves(template))
+        return [-(-_leaf_elems(l) * self.bits // 8) + 4
+                for l in jax.tree.leaves(template)]
 
 
 @dataclass(frozen=True, repr=False)
@@ -209,10 +267,10 @@ class TopKMean(_DeltaReducer):
         deq = jnp.zeros_like(y).at[jnp.arange(n)[:, None], idx].set(vals)
         return deq, jnp.sum(deq, axis=0) * (1.0 / n)
 
-    def message_bytes(self, template) -> int:
+    def leaf_message_bytes(self, template) -> list:
         # (f32 value + i32 index) per kept entry
-        return sum(8 * self._k(_leaf_elems(l))
-                   for l in jax.tree.leaves(template))
+        return [8 * self._k(_leaf_elems(l))
+                for l in jax.tree.leaves(template)]
 
 
 @dataclass(frozen=True, repr=False)
@@ -293,11 +351,33 @@ class StalenessWeightedMean(_DeltaReducer):
         return jax.tree.map(lambda s, p: s + w * p.astype(s.dtype),
                             server, payload)
 
-    def message_bytes(self, template) -> int:
+    def leaf_message_bytes(self, template) -> list:
         if self.compress == "dense":
-            return sum(_leaf_elems(l) * 4 for l in jax.tree.leaves(template))
-        return sum(-(-_leaf_elems(l) * self.bits // 8) + 4
-                   for l in jax.tree.leaves(template))
+            return [_leaf_elems(l) * 4 for l in jax.tree.leaves(template)]
+        return [-(-_leaf_elems(l) * self.bits // 8) + 4
+                for l in jax.tree.leaves(template)]
+
+
+def reduce_streaming(reducer: Reducer, stacked, state, rng):
+    """One streaming round: reduce the stacked replica tree leaf by leaf.
+
+    The single copy of the per-leaf round structure every streaming
+    execution path shares (``engine.StreamingStar.reduce``,
+    ``local_sgd.build_sync_step(streaming=True)``): leaves are processed
+    in *reverse-layer order* — the order they finish their last local
+    step under backprop — and each leaf folds the same per-leaf rng the
+    tree-level ``reducer.reduce`` folds (``fold_in(rng, leaf_index)``),
+    so the result is bit-exact with the blocking round. Returns
+    ``(consensus tree, new state)`` like ``Reducer.reduce``.
+    """
+    leaves, treedef = jax.tree.flatten(stacked)
+    states = reducer.split_state(state, treedef)
+    out = [None] * len(leaves)
+    new = [None] * len(leaves)
+    for i in reversed(range(len(leaves))):
+        out[i], new[i] = reducer.reduce_leaf(
+            leaves[i], states[i], jax.random.fold_in(rng, i))
+    return treedef.unflatten(out), reducer.join_state(new, treedef)
 
 
 def get_reducer(spec, *, quant_bits: int = 8, topk_frac: float = 0.1,

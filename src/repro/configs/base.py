@@ -164,3 +164,11 @@ class TrainConfig:
     straggler_slowdown: float = 1.0
     compute_jitter: float = 0.0
     dropout_rate: float = 0.0
+    # upload schedule (repro.runtime): how a client's round-end message
+    # meets the event clock. "blocking" ships one monolithic message after
+    # compute_done; "streaming" starts each leaf's upload as soon as its
+    # last local step completes (reverse-layer order), overlapping the
+    # remaining compute — modeled time only, trajectories are bit-exact
+    # across schedules. The execution-side analogue is topology="streaming"
+    # (engine.StreamingStar: the pjit driver's per-leaf reduce).
+    upload_schedule: str = "blocking"

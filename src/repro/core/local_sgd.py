@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm import get_reducer
-from repro.comm.reducer import DenseMean
+from repro.comm.reducer import DenseMean, reduce_streaming
 from repro.configs.base import ArchConfig
 from repro.models import transformer as TF
 from repro.optim import make_optimizer
@@ -74,7 +74,8 @@ def batch_spec(cfg: ArchConfig, client_axis: Optional[str], extra_data_axis: boo
     return spec
 
 
-def build_sync_step(reducer=None, *, base_seed: int = 0):
+def build_sync_step(reducer=None, *, base_seed: int = 0,
+                    streaming: bool = False):
     """Reducer-aware Algorithm 1 line 5: the parameter-averaging round.
 
     Returns ``sync_step(state) -> state``. With the default DenseMean this is
@@ -86,6 +87,15 @@ def build_sync_step(reducer=None, *, base_seed: int = 0):
     Optimizer moments are always dense-averaged — they never cross the
     network in a real deployment (the average mirrors Alg. 1's replica
     consensus, not a transmitted payload).
+
+    ``streaming=True`` emits the *per-leaf* round (``engine.StreamingStar``
+    semantics): one independent ``reduce_leaf`` per parameter leaf, in
+    reverse-layer order — the order leaves finish their last local step
+    under backprop. Numerics are bit-exact with the blocking round (each
+    leaf folds the same per-leaf rng), but the reduce is expressed as
+    per-leaf data-independent ops, so when the step runs under jit XLA's
+    scheduler is free to interleave leaf l's reduce with the remaining
+    leaves' compute instead of waiting on one whole-tree collective.
     """
     reducer = get_reducer(reducer)
     dense = isinstance(reducer, DenseMean)
@@ -93,23 +103,35 @@ def build_sync_step(reducer=None, *, base_seed: int = 0):
     def sync_step(state):
         n = jax.tree.leaves(state["params"])[0].shape[0]
         opt = tree_broadcast_leading(tree_mean_leading(state["opt"]), n)
-        if dense:
+        rng = jax.random.fold_in(jax.random.key(base_seed), state["step"])
+        if dense and not streaming:
             params = tree_broadcast_leading(
                 tree_mean_leading(state["params"]), n)
             out = dict(state, params=params, opt=opt)
+        elif dense:
+            # streaming dense round: per-leaf mean + rebroadcast (state
+            # tree untouched, like the blocking dense round; rng unused)
+            consensus, _ = reduce_streaming(reducer, state["params"], None,
+                                            rng)
+            out = dict(state, params=tree_broadcast_leading(consensus, n),
+                       opt=opt)
         else:
             comm = state.get("comm")
             if comm is None:
                 comm = reducer.init_state(state["params"])
-            rng = jax.random.fold_in(jax.random.key(base_seed), state["step"])
-            consensus, comm = reducer.reduce(state["params"], comm, rng)
+            consensus, comm = (
+                reduce_streaming(reducer, state["params"], comm, rng)
+                if streaming else
+                reducer.reduce(state["params"], comm, rng))
             out = dict(state, params=tree_broadcast_leading(consensus, n),
                        opt=opt, comm=comm)
         return out
 
-    # tag the step with its reducer so StagewiseDriver's comm accounting
-    # can't drift from what the round actually transmits
+    # tag the step with its reducer (and round structure) so
+    # StagewiseDriver's comm accounting can't drift from what the round
+    # actually transmits
     sync_step.reducer = reducer
+    sync_step.streaming = streaming
     return sync_step
 
 
@@ -120,14 +142,16 @@ def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
                       microbatch: int = 1,
                       sync_grads: bool = False,
                       reducer=None,
+                      streaming: bool = False,
                       donate: bool = True):
     """Returns (train_step_local, sync_step, specs) for the given mesh.
 
     train_step_local(state, batch, eta) -> (state, metrics)
         state = {"params": (C, ...), "opt": (C, ...), "step": scalar}
     sync_step(state) -> state   (client-axis parameter average; built by
-        ``build_sync_step(reducer)`` — pass ``reducer`` for a compressed
-        round, default dense)
+        ``build_sync_step(reducer, streaming=streaming)`` — pass ``reducer``
+        for a compressed round, default dense; ``streaming=True`` for the
+        per-leaf reduce XLA can overlap with compute)
 
     ``microbatch`` > 1 splits each client's batch into that many
     gradient-accumulation slices (scan), dividing activation memory.
@@ -189,7 +213,7 @@ def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
         return dict(state, params=params, opt=opt, step=state["step"] + 1), {
             "loss": jnp.mean(loss)}
 
-    sync_step = build_sync_step(reducer)
+    sync_step = build_sync_step(reducer, streaming=streaming)
 
     return train_step_local, sync_step, per_client_step
 

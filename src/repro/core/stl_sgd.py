@@ -25,7 +25,7 @@ from repro.comm import NetworkModel, get_reducer
 from repro.configs.base import TrainConfig
 from repro.engine.algorithm import get_algorithm
 from repro.engine.engine import Engine, StageStatus
-from repro.engine.topology import Star
+from repro.engine.topology import Star, StreamingStar
 from repro.utils.tree import tree_mean_leading
 from repro.utils.logging import get_logger
 
@@ -51,6 +51,10 @@ class DriverState:
     iters_total: int = 0
     comm_bytes_total: int = 0      # modeled bytes moved by sync rounds
     comm_time_s: float = 0.0       # α–β modeled wall-clock of those rounds
+    # per-(leaf, hop) totals ({"leaf","path","hop","bytes","time_s"}); the
+    # streaming round's ledger — sums reconcile with the tree-level totals
+    # above (bytes bit-exactly, seconds to float-sum precision)
+    leaf_ledger: List[dict] = field(default_factory=list)
 
 
 class DriverBackend:
@@ -110,6 +114,7 @@ class DriverBackend:
     def finish(self, engine: Engine) -> DriverState:
         self.ds.comm_bytes_total = engine.report.comm_bytes_total
         self.ds.comm_time_s = engine.report.comm_time_s
+        self.ds.leaf_ledger = engine.leaf_ledger()
         return self.ds
 
 
@@ -139,7 +144,17 @@ class StagewiseDriver:
         self.reducer = get_reducer(
             reducer if reducer is not None else tcfg.reducer,
             quant_bits=tcfg.quant_bits, topk_frac=tcfg.topk_frac)
-        if getattr(tcfg, "topology", "star") not in (None, "star", "flat"):
+        topo_spec = getattr(tcfg, "topology", "star")
+        # a sync_step built with build_sync_step(streaming=True) implies the
+        # per-leaf round even when the config says plain "star"
+        self.streaming = (topo_spec in ("streaming", "streaming-star",
+                                        "stream")
+                          or bool(getattr(sync_step, "streaming", False)
+                                  or getattr(getattr(sync_step, "__wrapped__",
+                                                     None), "streaming",
+                                             False)))
+        if topo_spec not in (None, "star", "flat", "streaming",
+                             "streaming-star", "stream"):
             # sync_step transmits a flat client-axis average; accepting a
             # hierarchical config here would make the driver's ledger and
             # comm_summary_for price different topologies for one run.
@@ -151,24 +166,36 @@ class StagewiseDriver:
                                 bandwidth_gbps=tcfg.comm_bandwidth_gbps)
         self.algorithm = get_algorithm(tcfg.algo)
         policy = self.algorithm.sync_policy
-        if getattr(policy, "asynchronous", False) \
-                or getattr(policy, "adaptive", False):
+        if getattr(policy, "asynchronous", False):
             # the driver's (train_step, sync_step) contract is a barriered
             # fixed-schedule round; running these policies here would
             # silently execute the wrong semantics under the right name
             raise ValueError(
-                f"StagewiseDriver runs barriered fixed-schedule rounds; "
-                f"algorithm {self.algorithm.name!r} needs "
-                f"repro.runtime.EventBackend (async) or the vmapped "
-                f"simulator (adaptive)")
+                f"StagewiseDriver runs barriered fixed-schedule rounds, but "
+                f"algorithm {self.algorithm.name!r} carries the asynchronous "
+                f"{type(policy).__name__} policy (merge-on-arrival, no "
+                f"barrier). Run it on the event runtime instead: "
+                f"repro.runtime.run / repro.runtime.EventBackend")
+        if getattr(policy, "adaptive", False):
+            raise ValueError(
+                f"StagewiseDriver runs barriered fixed-schedule rounds, but "
+                f"algorithm {self.algorithm.name!r} carries the "
+                f"{type(policy).__name__} policy, whose divergence probe "
+                f"decides each round at runtime. Run it on the vmapped "
+                f"simulator (core.simulate.run) or the event runtime "
+                f"(repro.runtime.EventBackend)")
         self.stages = self.algorithm.stages(tcfg)
 
     def run(self, state: dict, batches, max_iters: Optional[int] = None
             ) -> DriverState:
         ds = DriverState(state=state)
-        # a fresh Engine per run: its report is the run's comm ledger
+        # a fresh Engine per run: its report is the run's comm ledger.
+        # Streaming rounds price identically to Star (same bytes, same
+        # serial α–β time) but additionally carry the per-leaf ledger.
+        topo_cls = StreamingStar if self.streaming else Star
         engine = Engine(self.algorithm, self.tcfg,
-                        topology=Star(reducer=self.reducer, network=self.net))
+                        topology=topo_cls(reducer=self.reducer,
+                                          network=self.net))
         ds = engine.run(DriverBackend(self, ds, batches, max_iters))
         log.info("comm: reducer=%s rounds=%d bytes=%.3e modeled_time=%.3fs",
                  self.reducer.name, ds.rounds_total, ds.comm_bytes_total,

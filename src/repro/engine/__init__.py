@@ -26,7 +26,9 @@ from repro.engine.policy import (
 from repro.engine.topology import (
     Hierarchical,
     HopCost,
+    LeafCost,
     Star,
+    StreamingStar,
     Topology,
     get_topology,
 )
@@ -49,6 +51,7 @@ __all__ = [
     "Hierarchical",
     "HopCost",
     "LargeBatchUpdate",
+    "LeafCost",
     "LocalUpdate",
     "SgdUpdate",
     "Stage",
@@ -56,6 +59,7 @@ __all__ = [
     "StagewiseGeometric",
     "StagewiseLinear",
     "Star",
+    "StreamingStar",
     "SyncPolicy",
     "Topology",
     "algorithm_names",

@@ -51,6 +51,15 @@ from repro.engine.update import (
 
 @dataclass(frozen=True)
 class Algorithm:
+    """One training method, declaratively: *when* to communicate
+    (``sync_policy`` — the (η_s, T_s, k_s) stage schedule, T_s in local
+    iterations, k_s in local steps between rounds), *how* clients step
+    between rounds (``local_update`` — the minibatch size/growth rule),
+    and whether the loss is the ^nc prox surrogate f^γ re-centered at
+    each stage start (``prox``, active only when cfg.gamma_inv > 0).
+    Resolved by name through the registry (``get_algorithm``); consumed
+    unchanged by all three execution backends."""
+
     name: str
     sync_policy: SyncPolicy
     local_update: LocalUpdate = field(default_factory=SgdUpdate)
@@ -67,6 +76,8 @@ class Algorithm:
         return self.prox and cfg.gamma_inv > 0.0
 
     def gamma_inv(self, cfg) -> float:
+        """Effective prox strength 1/γ (0.0 when the method has no prox
+        term or the config disables it)."""
         return cfg.gamma_inv if self.uses_center(cfg) else 0.0
 
 
@@ -74,6 +85,14 @@ _REGISTRY: Dict[str, Algorithm] = {}
 
 
 def register(algorithm: Algorithm, *, overwrite: bool = False) -> Algorithm:
+    """Add an Algorithm to the registry under its ``name``.
+
+    Every front-end (simulator, driver, runtime, benchmarks, CLI) resolves
+    ``cfg.algo`` strings through this registry, so a registered method is
+    immediately runnable everywhere — no engine or front-end edits. Raises
+    on duplicate names unless ``overwrite=True``; returns the algorithm
+    for decorator-style use.
+    """
     if algorithm.name in _REGISTRY and not overwrite:
         raise ValueError(f"algorithm {algorithm.name!r} already registered")
     _REGISTRY[algorithm.name] = algorithm
@@ -116,6 +135,9 @@ def make_async(algorithm) -> Algorithm:
 
 
 def algorithm_names() -> Tuple[str, ...]:
+    """Registered algorithm names, in registration order — the exact
+    strings ``TrainConfig.algo`` accepts (each also composes with the
+    ``"+async"`` suffix for barrier-free execution)."""
     return tuple(_REGISTRY)
 
 

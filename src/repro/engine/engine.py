@@ -36,7 +36,9 @@ from repro.engine.topology import Topology, get_topology
 
 @dataclass
 class StageStatus:
-    """What a backend did with one stage."""
+    """What a backend did with one stage: ``rounds`` communication rounds
+    executed and ``iters`` local iterations consumed (the engine scales
+    both into the comm ledger), plus the early-exit flag."""
 
     rounds: int = 0
     iters: int = 0
@@ -45,7 +47,17 @@ class StageStatus:
 
 @dataclass
 class EngineReport:
-    """Cross-backend run ledger: rounds, iterations, modeled comm cost."""
+    """Cross-backend run ledger.
+
+    Units: ``rounds_total`` / ``iters_total`` count communication rounds
+    and local iterations; ``comm_bytes_total`` is modeled payload bytes
+    moved by those rounds (all hops); ``comm_time_s`` their serial α–β
+    link time in modeled seconds. ``hop_costs`` is the per-hop price of
+    one round (``topology.HopCost``); ``leaf_costs`` the per-(leaf, hop)
+    breakdown of the same round (``topology.LeafCost``, empty when the
+    topology has no per-leaf accounting) — multiply by ``rounds_total``
+    for run totals; the sums reconcile with the tree-level ledger.
+    """
 
     rounds_total: int = 0
     iters_total: int = 0
@@ -53,6 +65,7 @@ class EngineReport:
     comm_time_s: float = 0.0
     stages_run: int = 0
     hop_costs: List[Any] = field(default_factory=list)
+    leaf_costs: List[Any] = field(default_factory=list)
 
 
 def topology_for(cfg, reducer=None, topology=None) -> Topology:
@@ -91,13 +104,34 @@ class Engine:
     # -- comm-cost ledger ---------------------------------------------------
 
     def set_cost_basis(self, template, n_clients: int):
-        """Price one round for this run (template = single-replica pytree)."""
+        """Price one round for this run (template = single-replica pytree).
+
+        Fills both ledger views: the per-hop tree-level costs and — when
+        the topology supports it — the per-(leaf, hop) breakdown used by
+        streaming rounds. Bytes are modeled payload bytes, times modeled
+        seconds on the serial α–β link.
+        """
         self._template = template
         self._n_clients = n_clients
         hops = self.topology.hop_costs(template, n_clients)
         self.report.hop_costs = hops
+        self.report.leaf_costs = self.topology.leaf_costs(template, n_clients)
         self._bytes_per_round = sum(h.bytes for h in hops)
         self._time_per_round = sum(h.time_s for h in hops)
+
+    def leaf_ledger(self) -> List[dict]:
+        """Per-leaf comm totals for the rounds run so far.
+
+        One dict per (leaf, hop): ``bytes`` (modeled payload bytes) and
+        ``time_s`` (serial α–β seconds), each the per-round ``LeafCost``
+        scaled by ``rounds_total``. Summing the entries reconciles with
+        ``comm_bytes_total`` bit-exactly and ``comm_time_s`` to float-sum
+        precision. Empty when the topology has no per-leaf accounting.
+        """
+        r = self.report.rounds_total
+        return [{"leaf": lc.leaf, "path": lc.path, "hop": lc.hop,
+                 "bytes": lc.bytes * r, "time_s": lc.time_s * r}
+                for lc in self.report.leaf_costs]
 
     def comm_summary(self) -> dict:
         """Per-hop comm report for the rounds run so far."""
@@ -107,6 +141,9 @@ class Engine:
     # -- run loop -----------------------------------------------------------
 
     def run(self, backend):
+        """Walk the stage stream through ``backend`` and return its native
+        result, accumulating the run ledger (rounds, iterations, modeled
+        comm bytes/seconds) in ``self.report`` along the way."""
         backend.setup(self)
         if self._bytes_per_round is None:
             raise RuntimeError(

@@ -26,6 +26,11 @@ from typing import List
 
 @dataclass(frozen=True)
 class Stage:
+    """One stage of a stagewise schedule — the unit both execution
+    backends consume. Units: ``T`` counts local iterations in the stage,
+    ``k`` local steps between communication rounds (so the stage runs
+    ⌈T/k⌉ rounds), ``eta`` is the stage learning rate η_s."""
+
     s: int          # 1-based stage index
     eta: float      # learning rate η_s
     T: int          # iterations in this stage
@@ -34,7 +39,10 @@ class Stage:
 
 
 def k_growth(iid: bool, geometric: bool, s: int) -> float:
-    """Multiplier applied to k₁ at stage s (1-based)."""
+    """Multiplier applied to k₁ (local steps per round) at stage s
+    (1-based): 2^(s−1) / √2^(s−1) for the geometric schedules (Alg. 2 /
+    Alg. 3 Opt. 1), s / √s for the linear one (Alg. 3 Opt. 2) — the IID
+    variant in the numerator position, the Non-IID √ variant otherwise."""
     if geometric:
         return 2.0 ** (s - 1) if iid else math.sqrt(2.0) ** (s - 1)
     return float(s) if iid else math.sqrt(float(s))
@@ -59,10 +67,14 @@ class SyncPolicy:
 
     def stage(self, s: int, eta1: float, T1: int, k1: float,
               iid: bool) -> Stage:
+        """Concrete stage s (1-based) from the initial (η₁, T₁, k₁) — η in
+        learning-rate units, T in local iterations, k in steps/round."""
         raise NotImplementedError
 
     def stages(self, eta1: float, T1: int, k1: float, n_stages: int,
                iid: bool = True) -> List[Stage]:
+        """Expand the full schedule both execution backends consume: the
+        concrete Stage list for stages 1..n_stages."""
         return [self.stage(s, eta1, T1, k1, iid)
                 for s in range(1, n_stages + 1)]
 

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.cost import NetworkModel, link_model, round_bytes, round_time
-from repro.comm.reducer import DenseMean, Reducer, get_reducer
+from repro.comm.reducer import DenseMean, Reducer, get_reducer, reduce_streaming
 
 
 @dataclass(frozen=True)
@@ -41,24 +41,68 @@ class HopCost:
     time_s: float       # α + serial_bytes / bandwidth (parallel links once)
 
 
+@dataclass(frozen=True)
+class LeafCost:
+    """Modeled cost of ONE leaf's share of one hop of one round.
+
+    The per-leaf comm ledger: ``bytes`` is the total traffic that leaf's
+    messages put on the hop per round (all clients), ``time_s`` its share of
+    the hop's serial α–β time (the hop latency α is attributed to the
+    hop's first leaf once, serialization is bytes/bandwidth). Summing a
+    hop's LeafCosts reproduces the tree-level ``HopCost`` — bytes
+    bit-exactly (integer per-leaf formulas), seconds to float-sum precision.
+    """
+
+    leaf: int           # index into jax.tree.leaves(template)
+    path: str           # jax.tree_util.keystr of the leaf
+    hop: str            # same hop names as HopCost
+    bytes: int          # total per-round traffic of this leaf on this hop
+    time_s: float       # this leaf's share of the hop's serial α–β time
+
+
+def _leaf_paths(template) -> List[str]:
+    """Human-readable key paths for every leaf of a template pytree."""
+    paths, _ = jax.tree_util.tree_flatten_with_path(template)
+    return [jax.tree_util.keystr(p) for p, _ in paths]
+
+
 class Topology:
     """Base protocol — reducer-compatible reduce + per-hop costing."""
 
     name = "base"
 
     def init_state(self, stacked):
+        """Reducer state (EF residuals per hop) for the stacked (N, ...)
+        replica tree; call at run start when replicas are identical."""
         raise NotImplementedError
 
     def reduce(self, stacked, state, rng):
+        """Route one round: (stacked replicas, state, rng) -> (consensus
+        tree without the client axis, new state). jit/scan-safe."""
         raise NotImplementedError
 
     def hop_costs(self, template, n_clients: int) -> List[HopCost]:
+        """Price one round hop by hop: total payload bytes crossing each
+        hop and its serial α–β time in modeled seconds (``template`` is a
+        single-replica pytree of arrays or ShapeDtypeStructs)."""
         raise NotImplementedError
 
+    def leaf_costs(self, template, n_clients: int) -> List[LeafCost]:
+        """Per-(leaf, hop) breakdown of one round's modeled cost.
+
+        Empty by default (a topology without per-leaf accounting); Star,
+        StreamingStar and Hierarchical implement it so the engine ledger can
+        reconcile streaming per-leaf uploads against tree-level totals.
+        """
+        return []
+
     def round_bytes(self, template, n_clients: int) -> int:
+        """Total modeled payload bytes one round moves across all hops."""
         return sum(h.bytes for h in self.hop_costs(template, n_clients))
 
     def round_time(self, template, n_clients: int) -> float:
+        """Total serial α–β time of one round across all hops, in modeled
+        seconds (parallel intra-pod links are priced once)."""
         return sum(h.time_s for h in self.hop_costs(template, n_clients))
 
     def summary(self, template, n_clients: int, n_rounds: int) -> dict:
@@ -108,6 +152,55 @@ class Star(Topology):
         return [HopCost(hop="uplink", reducer=self.reducer.name,
                         network=self.network, bytes=up,
                         time_s=round_time(self.network, up))]
+
+    def leaf_costs(self, template, n_clients: int) -> List[LeafCost]:
+        try:
+            leaf_bytes = self.reducer.leaf_message_bytes(template)
+        except NotImplementedError:
+            # custom reducers predating the per-leaf protocol (only
+            # message_bytes overridden) still run — without a leaf ledger
+            return []
+        if self.network.count_downlink:
+            # mirror round_bytes: the dense broadcast is billed per leaf
+            # too, so the ledger still reconciles on count_downlink links
+            down = DenseMean().leaf_message_bytes(template)
+            leaf_bytes = [b + d for b, d in zip(leaf_bytes, down)]
+        paths = _leaf_paths(template)
+        out = []
+        for i, (b, p) in enumerate(zip(leaf_bytes, paths)):
+            total = n_clients * b
+            t = total / self.network.bandwidth_Bps
+            if i == 0:  # the hop latency α is paid once per round
+                t += self.network.latency_s
+            out.append(LeafCost(leaf=i, path=p, hop="uplink",
+                                bytes=total, time_s=t))
+        return out
+
+
+@dataclass(frozen=True)
+class StreamingStar(Star):
+    """Star whose reduce runs *per leaf* — the streaming execution topology.
+
+    Numerics are bit-exact with ``Star`` (each leaf is reduced with the
+    same per-leaf rng the tree-level reducer folds), but the reduction is
+    expressed as one independent ``reduce_leaf`` call per leaf, in
+    reverse-layer order — the order leaves finish their last local step
+    under backprop. That is the structure a jit'd sync step needs for XLA
+    to interleave leaf l's reduce with the remaining leaves' compute, and
+    it is what ``local_sgd.build_sync_step(streaming=True)`` emits; the
+    cost model (``hop_costs`` / ``leaf_costs``) is inherited unchanged, so
+    streaming and blocking ledgers reconcile by construction. The modeled
+    *overlap* win is priced by ``runtime.StreamingSchedule``, not here —
+    the ledger stays the serial α–β view.
+    """
+
+    name = "streaming-star"
+
+    def reduce(self, stacked, state, rng):
+        """The per-leaf round: ``comm.reduce_streaming`` over the uplink
+        reducer (one shared copy of the reverse-order + per-leaf-rng
+        structure, so execution paths cannot drift)."""
+        return reduce_streaming(self.reducer, stacked, state, rng)
 
 
 @dataclass(frozen=True)
@@ -185,6 +278,34 @@ class Hierarchical(Topology):
                     + inter_total / self.inter_net.bandwidth_Bps),
         ]
 
+    def leaf_costs(self, template, n_clients: int) -> List[LeafCost]:
+        """Per-leaf ledger across both hops, mirroring ``hop_costs``:
+        intra-pod time sees one pod's per-leaf traffic (pods run in
+        parallel), inter-pod time the pod-mean messages; each hop's α is
+        attributed to its first leaf once."""
+        if n_clients % self.n_pods:
+            raise ValueError(
+                f"{n_clients} clients not divisible into {self.n_pods} pods")
+        m = n_clients // self.n_pods
+        paths = _leaf_paths(template)
+        out = []
+        try:
+            per_hop = [self.intra.leaf_message_bytes(template),
+                       self.inter.leaf_message_bytes(template)]
+        except NotImplementedError:
+            return []  # pre-per-leaf-protocol custom reducer: no ledger
+        for (hop, red, net, mult, tmult), hop_bytes in zip((
+                ("intra_pod", self.intra, self.intra_net, n_clients, m),
+                ("inter_pod", self.inter, self.inter_net, self.n_pods,
+                 self.n_pods)), per_hop):
+            for i, (b, p) in enumerate(zip(hop_bytes, paths)):
+                t = tmult * b / net.bandwidth_Bps
+                if i == 0:
+                    t += net.latency_s
+                out.append(LeafCost(leaf=i, path=p, hop=hop,
+                                    bytes=mult * b, time_s=t))
+        return out
+
 
 def get_topology(spec, *, reducer=None, network: Optional[NetworkModel] = None,
                  n_pods: int = 2, inter_reducer=None,
@@ -192,6 +313,8 @@ def get_topology(spec, *, reducer=None, network: Optional[NetworkModel] = None,
     """Resolve a topology from a config string (or pass one through).
 
     "star" (default) wraps ``reducer`` in the single-hop paper topology;
+    "streaming"/"streaming-star" is the same hop but reduced per leaf
+    (communication/compute overlap — see ``StreamingStar``);
     "hier"/"hierarchical" composes ``reducer`` intra-pod (dense by default)
     with ``inter_reducer`` (int8 by default) inter-pod over calibrated
     ICI/WAN links.
@@ -201,6 +324,8 @@ def get_topology(spec, *, reducer=None, network: Optional[NetworkModel] = None,
     red = get_reducer(reducer, quant_bits=quant_bits, topk_frac=topk_frac)
     if spec in (None, "star", "flat"):
         return Star(reducer=red, network=network or NetworkModel())
+    if spec in ("streaming", "streaming-star", "stream"):
+        return StreamingStar(reducer=red, network=network or NetworkModel())
     if spec in ("hier", "hierarchical", "pods"):
         inter = get_reducer(inter_reducer if inter_reducer is not None
                             else "int8", quant_bits=quant_bits,

@@ -46,3 +46,45 @@ def dequant_mean(q, scales, *, bits: int = 8, impl: str = "xla",
         return R.dequant_mean_ref(q, scales, bits=bits)
     return dequant_mean_kernel(q, scales, bits=bits, block=block,
                                interpret=impl == "interpret")
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf path — the unit the streaming reduce pipelines
+# ---------------------------------------------------------------------------
+#
+# A streaming round reduces the model one leaf at a time (engine.StreamingStar
+# / local_sgd.build_sync_step(streaming=True)), so the ops layer exposes the
+# two halves of ONE leaf's compressed round as self-contained calls: XLA can
+# schedule leaf l's encode/decode concurrently with other leaves' compute
+# instead of waiting for a whole-tree compression. Both halves dispatch to
+# the same kernels (or the jnp oracle) as the tree-level entry points, so
+# streaming and blocking rounds are bit-exact.
+
+def encode_leaf(y, rand_bits, scales, *, bits: int = 8, impl: str = "xla",
+                block: int = 65536):
+    """Client half of one leaf's round: SR-quantize an (N, M) delta block.
+
+    ``y``: f32 (N, M) per-client deltas (flattened leaf); ``rand_bits``:
+    uint32 (N, M); ``scales``: f32 (N,) per-client symmetric scales.
+    Returns int8 codes of ``y``'s shape.
+    """
+    if impl == "xla":
+        return R.quantize_ref(y, rand_bits, scales[:, None], bits=bits)
+    return jnp.stack([
+        quantize(y[j], rand_bits[j], scales[j], bits=bits, impl=impl,
+                 block=block)
+        for j in range(y.shape[0])])
+
+
+def decode_mean_leaf(q, scales, *, bits: int = 8, impl: str = "xla",
+                     block: int = 65536):
+    """Server half of one leaf's round: fused dequantize + mean.
+
+    ``q``: int8 (N, M) codes; ``scales``: f32 (N,). Returns
+    ``(deq, mean)`` — each client's dequantized f32 message (N, M), needed
+    for the error-feedback residual, and their average (M,).
+    """
+    qmax = R.qmax_for(bits)
+    mean = dequant_mean(q, scales, bits=bits, impl=impl, block=block)
+    deq = q.astype(jnp.float32) * (scales[:, None] / qmax)
+    return deq, mean

@@ -1,3 +1,3 @@
-from repro.models import transformer, attention, moe, ssm, rglru, layers, cnn, logreg
+from repro.models import transformer, attention, moe, ssm, rglru, layers, cnn, logreg, mlp
 
-__all__ = ["transformer", "attention", "moe", "ssm", "rglru", "layers", "cnn", "logreg"]
+__all__ = ["transformer", "attention", "moe", "ssm", "rglru", "layers", "cnn", "logreg", "mlp"]

@@ -1,0 +1,64 @@
+"""Small multi-layer perceptron — the multi-leaf streaming-reduce testbed.
+
+Same binary-classification problem shape as ``models.logreg`` (batch =
+``{"x": (B, d), "y": (B,) in {-1, +1}}``, L2-regularized logistic loss) but
+with a parameter *tree* of ≥ 4 leaves: ``depth`` equal-width tanh hidden
+layers plus a linear head. Streaming per-leaf uploads only help when the
+model has several comparably-sized leaves whose last local step completes
+at different times (reverse-layer order under backprop) — logreg's single
+``theta`` leaf can never overlap anything, which is exactly what
+``benchmarks/table5_straggler.py``'s {blocking, streaming} axis needs a
+contrast against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_params(rng, n_features: int, width: int = 96, depth: int = 3):
+    """He-initialized MLP params: ``depth`` hidden {w, b} pairs + a head.
+
+    2·(depth + 1) leaves; with the default width the three hidden weight
+    matrices are equal-sized, which maximises the streaming overlap window
+    (each leaf's upload hides behind the next leaf's backward compute).
+    """
+    rng = jax.random.key(0) if rng is None else rng
+    keys = jax.random.split(rng, depth + 1)
+    layers = []
+    d_in = n_features
+    for i in range(depth):
+        w = jax.random.normal(keys[i], (d_in, width), jnp.float32) \
+            * jnp.sqrt(2.0 / d_in)
+        layers.append({"w": w, "b": jnp.zeros((width,), jnp.float32)})
+        d_in = width
+    head = {"w": jax.random.normal(keys[depth], (d_in, 1), jnp.float32)
+            * jnp.sqrt(2.0 / d_in),
+            "b": jnp.zeros((1,), jnp.float32)}
+    return {"layers": layers, "out": head}
+
+
+def forward(params, x):
+    """Per-example logit: tanh MLP over (B, d) features -> (B,)."""
+    h = x
+    for lyr in params["layers"]:
+        h = jnp.tanh(h @ lyr["w"] + lyr["b"])
+    return (h @ params["out"]["w"] + params["out"]["b"])[:, 0]
+
+
+def loss_fn(params, batch, lam: float):
+    """Mean logistic loss + (λ/2)·||params||² (all leaves)."""
+    margin = batch["y"] * forward(params, batch["x"])
+    data_loss = jnp.mean(jax.nn.softplus(-margin))
+    reg = 0.5 * lam * sum(jnp.sum(jnp.square(l))
+                          for l in jax.tree.leaves(params))
+    return data_loss + reg
+
+
+def full_objective(params, x, y, lam: float):
+    return loss_fn(params, {"x": x, "y": y}, lam)
+
+
+def accuracy(params, x, y):
+    pred = jnp.sign(forward(params, x))
+    return jnp.mean(pred == y)

@@ -3,7 +3,9 @@
 # EventBackend that plugs into repro.engine.Engine.run exactly like the
 # vmapped simulator — synchronous policies replay barrier rounds on the
 # clock (bit-exact numerics), AsyncPeriod policies merge uploads on arrival
-# through comm.StalenessWeightedMean.
+# through comm.StalenessWeightedMean. Upload schedules decide how round-end
+# messages meet the clock: BlockingSchedule (one monolithic message) or
+# StreamingSchedule (per-leaf uploads overlapping the final local step).
 from repro.runtime.client import ClientProcess, Heterogeneity, sample_clients
 from repro.runtime.clock import Clock, Event, EventQueue
 from repro.runtime.runtime import (
@@ -12,8 +14,15 @@ from repro.runtime.runtime import (
     run,
     staleness_reducer_for,
 )
+from repro.runtime.schedule import (
+    BlockingSchedule,
+    StreamingSchedule,
+    UploadSchedule,
+    get_schedule,
+)
 
 __all__ = [
+    "BlockingSchedule",
     "ClientProcess",
     "Clock",
     "Event",
@@ -21,6 +30,9 @@ __all__ = [
     "EventQueue",
     "Heterogeneity",
     "RuntimeResult",
+    "StreamingSchedule",
+    "UploadSchedule",
+    "get_schedule",
     "run",
     "sample_clients",
     "staleness_reducer_for",

@@ -56,6 +56,7 @@ class Heterogeneity:
                    seed=cfg.seed)
 
     def replace(self, **kw) -> "Heterogeneity":
+        """Functional update (dataclasses.replace) of profile fields."""
         return replace(self, **kw)
 
 
@@ -71,9 +72,14 @@ class ClientProcess:
     straggler: bool = False
 
     def compute_time(self, n_steps: int) -> float:
+        """Modeled seconds this client needs for ``n_steps`` local SGD
+        steps (``n_steps × step_time_s``; stragglers have larger
+        step_time_s)."""
         return n_steps * self.step_time_s
 
     def upload_time(self, n_bytes: float) -> float:
+        """Modeled seconds to ship ``n_bytes`` payload bytes over this
+        client's α–β uplink (one latency α + serialization at β)."""
         return self.network.time(n_bytes)
 
 

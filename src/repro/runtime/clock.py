@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 
 @dataclass(order=True, frozen=True)
@@ -20,9 +20,11 @@ class Event:
     """One scheduled occurrence. Ordering: (time, seq) — kind/client/info
     never participate in comparisons, so heap order is deterministic."""
 
-    time: float
-    seq: int
-    kind: str = field(compare=False)        # "compute_done" | "arrival" | ...
+    time: float                             # modeled seconds
+    seq: int                                # insertion order (tie-break)
+    # "compute_done" | "arrival" | "leaf_arrival" (streaming uploads,
+    # info=(leaf index,)) | "merge" | "dropout" | "drop" | ...
+    kind: str = field(compare=False)
     client: int = field(compare=False, default=-1)
     info: tuple = field(compare=False, default=())
 
@@ -36,6 +38,8 @@ class EventQueue:
 
     def push(self, time: float, kind: str, client: int = -1,
              info: tuple = ()) -> Event:
+        """Schedule an event at ``time`` modeled seconds; same-time events
+        pop in push order (the monotone ``seq`` breaks ties)."""
         ev = Event(time=float(time), seq=self._seq, kind=kind, client=client,
                    info=info)
         self._seq += 1
@@ -43,9 +47,12 @@ class EventQueue:
         return ev
 
     def pop(self) -> Event:
+        """Remove and return the earliest scheduled event."""
         return heapq.heappop(self._heap)
 
     def peek(self) -> Optional[Event]:
+        """The earliest scheduled event without removing it (None if
+        empty)."""
         return self._heap[0] if self._heap else None
 
     def __len__(self) -> int:
@@ -67,4 +74,6 @@ class Clock:
         return self.now
 
 
-TraceEntry = Tuple[float, str, int]  # (time_s, kind, client)
+# (time_s, kind, client[, leaf index]) — streaming "leaf_arrival" entries
+# carry the leaf index as a fourth element
+TraceEntry = Union[Tuple[float, str, int], Tuple[float, str, int, int]]

@@ -14,9 +14,14 @@ Two execution regimes, selected by the Algorithm's SyncPolicy:
       disabled the backend delegates stage execution to
       ``VmapSimulatorBackend.run_stage`` unchanged, so the trajectory is
       bit-exact with the golden engine traces. The event layer replays each
-      executed round on the clock: per-client compute-done and arrival
-      events, a barrier merge at the latest arrival (stragglers stretch
-      every round). With ``dropout > 0`` a per-(round, client) mask freezes
+      executed round on the clock through an *upload schedule*
+      (``runtime.schedule``): blocking rounds emit per-client compute-done
+      and arrival events and a barrier merge at the latest arrival
+      (stragglers stretch every round); streaming rounds
+      (``cfg.upload_schedule="streaming"``) emit per-leaf arrivals that
+      start during the final local step, pricing communication/compute
+      overlap — clock only, trajectories stay bit-exact across schedules.
+      With ``dropout > 0`` a per-(round, client) mask freezes
       dropped clients for the round; the reduce still spans all N replicas
       (a dropped client contributes a zero delta — error-feedback safe, and
       composes with hierarchical topologies).
@@ -55,7 +60,8 @@ from repro.engine.algorithm import get_algorithm, make_async
 from repro.engine.engine import Engine, StageStatus
 from repro.engine.topology import Star
 from repro.runtime.client import Heterogeneity, sample_clients
-from repro.runtime.clock import Clock, EventQueue
+from repro.runtime.clock import Clock, EventQueue, TraceEntry
+from repro.runtime.schedule import UploadSchedule, get_schedule
 from repro.utils.tree import tree_broadcast_leading, tree_mean_leading
 
 # numpy stream salt for the dropout draws (separate from the client sampler)
@@ -101,7 +107,8 @@ class EventBackend(VmapSimulatorBackend):
 
     def __init__(self, loss_fn, init_params, client_data, eval_fn, *,
                  hetero: Optional[Heterogeneity] = None, merge_reducer=None,
-                 eval_every: int = 1, max_rounds: Optional[int] = None,
+                 schedule=None, eval_every: int = 1,
+                 max_rounds: Optional[int] = None,
                  target: Optional[float] = None, lr_alpha: float = 0.0,
                  chunk_rounds: int = 32):
         super().__init__(loss_fn, init_params, client_data, eval_fn,
@@ -110,10 +117,14 @@ class EventBackend(VmapSimulatorBackend):
                          chunk_rounds=chunk_rounds)
         self._hetero_arg = hetero
         self._merge_arg = merge_reducer
+        self._schedule_arg = schedule
 
     # -- setup ---------------------------------------------------------------
 
     def setup(self, engine: Engine):
+        """Backend-contract setup: allocate simulator state (via the
+        parent), sample the client cohort, build clock/queue/trace, and
+        resolve the upload schedule + per-leaf payload/compute splits."""
         super().setup(engine)
         cfg = engine.cfg
         self.N = jax.tree.leaves(self.client_data)[0].shape[0]
@@ -124,7 +135,7 @@ class EventBackend(VmapSimulatorBackend):
         self.clients = sample_clients(self.N, self.hetero, net)
         self.clock = Clock()
         self.queue = EventQueue()
-        self.trace: List[Tuple[float, str, int]] = []
+        self.trace: List[TraceEntry] = []
         self.timeline: List[Tuple[float, int, float]] = [
             (0.0, 0, self.history[0].value)]
         self._np = np.random.RandomState(
@@ -140,6 +151,33 @@ class EventBackend(VmapSimulatorBackend):
         self._msg_bytes = first_hop.message_bytes(self.init_params)
         hops = topo.hop_costs(self.init_params, self.N)
         self._extra_hop_time = sum(h.time_s for h in hops[1:])
+
+        # upload schedule: what events one client's round-end message emits.
+        # Per-leaf payload bytes come from the uplink reducer; per-leaf
+        # compute fractions (share of one local step) from parameter counts.
+        self.schedule: UploadSchedule = get_schedule(
+            self._schedule_arg if self._schedule_arg is not None
+            else getattr(cfg, "upload_schedule", None))
+        try:
+            self._leaf_bytes = first_hop.leaf_message_bytes(self.init_params)
+            sizes = [l.size for l in jax.tree.leaves(self.init_params)]
+        except NotImplementedError:
+            if self.schedule.name == "streaming":
+                raise ValueError(
+                    f"reducer {first_hop!r} has no per-leaf payload "
+                    "accounting (leaf_message_bytes); streaming uploads "
+                    "need it — implement the per-leaf protocol or use the "
+                    "blocking schedule") from None
+            # blocking schedules only ever sum the list: one opaque blob
+            self._leaf_bytes, sizes = [self._msg_bytes], [1]
+        total = float(sum(sizes))
+        self._leaf_fracs = [s / total for s in sizes]
+        if self.asynchronous and self.schedule.name != "blocking":
+            raise ValueError(
+                f"upload_schedule={self.schedule.name!r} prices per-leaf "
+                "streaming of barriered rounds; AsyncPeriod merges whole "
+                "messages on arrival — run streaming with a synchronous "
+                "policy (drop async_mode / the '+async' suffix)")
 
         if self.asynchronous:
             red = self._merge_arg
@@ -170,6 +208,9 @@ class EventBackend(VmapSimulatorBackend):
     # -- synchronous regime --------------------------------------------------
 
     def run_stage(self, stage, engine: Engine) -> StageStatus:
+        """Backend-contract stage execution: synchronous policies run the
+        parent's numerics then replay the executed rounds on the clock;
+        AsyncPeriod policies consume the stage budget merge-on-arrival."""
         if self.asynchronous:
             return self._run_stage_async(stage, engine)
         if self.hetero.dropout > 0.0 \
@@ -196,27 +237,31 @@ class EventBackend(VmapSimulatorBackend):
     def _replay_rounds(self, round_steps: List[int], masks: List[np.ndarray]):
         """Advance the event clock over the executed barrier rounds.
 
-        A dropped client skipped its local compute window but still answers
-        the barrier with its zero-delta message (matching the masked round
-        numerics), so it schedules an upload-only arrival.
+        Each client's round becomes events via the upload schedule —
+        blocking: compute_done then one arrival; streaming: per-leaf
+        arrivals that start during the final local step (the overlap the
+        clock then prices). A dropped client skipped its local compute
+        window but still answers the barrier with its zero-delta message,
+        so it schedules upload-only arrivals.
         """
         for kk, mask in zip(round_steps, masks):
             start = self.clock.now
             for c in self.clients:
-                if mask[c.cid]:
-                    done = start + c.compute_time(kk)
-                    self.queue.push(done, "compute_done", c.cid)
-                    self.queue.push(done + c.upload_time(self._msg_bytes),
-                                    "arrival", c.cid)
-                else:
+                active = bool(mask[c.cid])
+                if not active:
                     self.trace.append((start, "dropout", c.cid))
-                    self.queue.push(start + c.upload_time(self._msg_bytes),
-                                    "arrival", c.cid)
+                events, _ = self.schedule.round_events(
+                    c, start, kk, self._leaf_bytes, self._leaf_fracs,
+                    active=active)
+                for t, kind, info in events:
+                    self.queue.push(t, kind, c.cid, info)
             merge_t = start
             while self.queue:
                 ev = self.queue.pop()
                 self.clock.advance(ev.time)
-                self.trace.append((ev.time, ev.kind, ev.client))
+                # per-leaf events stay attributable: leaf_arrival entries
+                # are (time, kind, client, leaf index)
+                self.trace.append((ev.time, ev.kind, ev.client) + ev.info)
                 merge_t = max(merge_t, ev.time)
             merge_t += self._extra_hop_time
             self.clock.advance(merge_t)
@@ -418,23 +463,35 @@ class RuntimeResult:
     comm_bytes: int                    # engine ledger (modeled payload bytes)
     comm_time_s: float                 # engine ledger (serial α–β link time)
     timeline: List[Tuple[float, int, float]]  # (time_s, round, objective)
-    trace: List[Tuple[float, str, int]]       # full event log
+    # full event log; streaming "leaf_arrival" entries carry the leaf
+    # index as a fourth element (see clock.TraceEntry)
+    trace: List[TraceEntry]
     params: Any = None                 # final consensus / server model
+    # per-(leaf, hop) comm totals for the whole run (engine.leaf_ledger():
+    # modeled payload bytes + serial α–β seconds per leaf); None when the
+    # topology has no per-leaf accounting. Summing the entries reconciles
+    # with comm_bytes (bit-exact) and comm_time_s (float-sum precision).
+    leaf_ledger: Optional[List[dict]] = None
 
 
 def run(loss_fn, init_params, client_data, cfg: TrainConfig, eval_fn, *,
         eval_every: int = 1, max_rounds: Optional[int] = None,
         target: Optional[float] = None, lr_alpha: float = 0.0,
         chunk_rounds: int = 32, reducer=None, topology=None,
-        hetero: Optional[Heterogeneity] = None) -> RuntimeResult:
+        hetero: Optional[Heterogeneity] = None,
+        schedule=None) -> RuntimeResult:
     """Run ``cfg.algo`` on the event runtime; the ``simulate.run`` of clocks.
 
     Same problem signature as ``core.simulate.run``. ``cfg.async_mode``
     (or an ``algo`` name carrying the ``+async`` suffix) switches to
     barrier-free merge-on-arrival rounds; the heterogeneity profile comes
     from the TrainConfig runtime fields unless ``hetero`` overrides it.
+    ``cfg.upload_schedule`` (or the explicit ``schedule`` arg) picks how
+    round-end uploads meet the clock — "blocking" monolithic messages or
+    "streaming" per-leaf uploads overlapping the final local step.
     With heterogeneity disabled and a synchronous policy, ``.history`` is
-    bit-exact with ``simulate.run``.
+    bit-exact with ``simulate.run`` — for *both* schedules: streaming
+    changes modeled time only, never the trajectory.
     """
     algo = get_algorithm(cfg.algo)
     if cfg.async_mode:
@@ -457,7 +514,8 @@ def run(loss_fn, init_params, client_data, cfg: TrainConfig, eval_fn, *,
     else:
         engine = Engine(algo, cfg, topology=topology, reducer=reducer)
     backend = EventBackend(loss_fn, init_params, client_data, eval_fn,
-                           hetero=hetero, eval_every=eval_every,
+                           hetero=hetero, schedule=schedule,
+                           eval_every=eval_every,
                            max_rounds=max_rounds, target=target,
                            lr_alpha=lr_alpha, chunk_rounds=chunk_rounds)
     history = engine.run(backend)
@@ -468,4 +526,5 @@ def run(loss_fn, init_params, client_data, cfg: TrainConfig, eval_fn, *,
         rounds=engine.report.rounds_total, iters=engine.report.iters_total,
         comm_bytes=engine.report.comm_bytes_total,
         comm_time_s=engine.report.comm_time_s,
-        timeline=backend.timeline, trace=backend.trace, params=final)
+        timeline=backend.timeline, trace=backend.trace, params=final,
+        leaf_ledger=engine.leaf_ledger() or None)

@@ -1,0 +1,144 @@
+"""Upload schedules — how one client's round-end message meets the clock.
+
+The event runtime prices every executed barrier round by replaying it as
+client events. The *upload schedule* decides what those events are:
+
+  BlockingSchedule    the historical model: the client finishes all k local
+                      steps, then ships one monolithic message —
+                      ``arrival = compute_done + α + total_bytes/bandwidth``.
+
+  StreamingSchedule   per-leaf streaming reduce (the ROADMAP's
+                      communication/compute overlap): leaf l's round delta
+                      is final as soon as the *last local step* updates
+                      leaf l, and backprop releases leaves in
+                      reverse-layer order spread across that final step —
+                      so leaf uploads start *before* ``compute_done`` and
+                      overlap the remaining layers' compute. The uplink is
+                      one serial streamed connection: the per-message
+                      latency α is paid once when the stream opens, then
+                      each leaf serializes at β as soon as it is released
+                      and the link is free.
+
+Numerics are untouched either way — the schedule is pure clock accounting
+on top of the bit-exact synchronous replay, which is exactly why streaming
+and blocking runs of the same config produce identical parameters while
+their modeled wall-clocks differ. Units throughout: times in modeled
+seconds, payloads in bytes, compute in local steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+from repro.runtime.client import ClientProcess
+
+# (time_s, event kind, info tuple) — info carries the leaf index for
+# per-leaf arrivals so traces stay attributable
+ScheduledEvent = Tuple[float, str, tuple]
+
+
+@dataclass(frozen=True)
+class UploadSchedule:
+    """Base protocol: turn one client's barrier round into clock events.
+
+    ``round_events`` returns ``(events, finish_s)`` where ``events`` is the
+    client's event list for the round — each ``(time_s, kind, info)`` —
+    and ``finish_s`` (modeled seconds) is when the client's full message
+    has arrived at the server; the barrier merges at the max finish over
+    clients. ``leaf_bytes[i]`` is leaf i's compressed payload in bytes,
+    ``leaf_fracs[i]`` its share of one local step's compute (unitless,
+    sums to 1 — proportional to parameter count). ``active=False`` replays
+    a dropped client: it missed its compute window but still answers the
+    barrier with its zero-delta message.
+    """
+
+    name = "base"
+
+    def round_events(self, client: ClientProcess, start: float, k_steps: int,
+                     leaf_bytes: Sequence[int], leaf_fracs: Sequence[float],
+                     active: bool = True
+                     ) -> Tuple[List[ScheduledEvent], float]:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class BlockingSchedule(UploadSchedule):
+    """One monolithic upload after all local compute — the historical
+    round price ``k·step_time + α + Σ bytes / bandwidth`` per client."""
+
+    name = "blocking"
+
+    def round_events(self, client, start, k_steps, leaf_bytes, leaf_fracs,
+                     active=True):
+        total = sum(leaf_bytes)
+        if not active:
+            # upload-only zero-delta answer (missed the compute window)
+            t = start + client.upload_time(total)
+            return [(t, "arrival", ())], t
+        done = start + client.compute_time(k_steps)
+        t = done + client.upload_time(total)
+        return [(done, "compute_done", ()), (t, "arrival", ())], t
+
+
+@dataclass(frozen=True)
+class StreamingSchedule(UploadSchedule):
+    """Per-leaf streaming uploads overlapping the final local step.
+
+    Release model: the final local step spans
+    ``[done − step_time, done]``; its backward pass completes leaves in
+    reverse-layer order, leaf l becoming final once its share of the
+    step's compute (``leaf_fracs``, ∝ parameter count) has accumulated.
+    Link model: one streamed connection — α once at stream open, then
+    strictly serial ``bytes/bandwidth`` per leaf in release order; a leaf
+    released while the link is busy queues. Emits one ``leaf_arrival``
+    per leaf (info = (leaf index,)) plus the usual ``compute_done``;
+    the client's finish is the last leaf's arrival, which is what lets a
+    multi-leaf model hide most of its upload behind its own compute.
+    """
+
+    name = "streaming"
+
+    def round_events(self, client, start, k_steps, leaf_bytes, leaf_fracs,
+                     active=True):
+        net = client.network
+        order = list(range(len(leaf_bytes)))[::-1]  # reverse-layer release
+        events: List[ScheduledEvent] = []
+        if not active:
+            # zero-delta answer: every leaf is "ready" at round start;
+            # the stream just serializes them back-to-back
+            t = start + net.latency_s
+            for leaf in order:
+                t += leaf_bytes[leaf] / net.bandwidth_Bps
+                events.append((t, "leaf_arrival", (leaf,)))
+            return events, t
+        done = start + client.compute_time(k_steps)
+        step = client.compute_time(1)
+        t_back = done - step            # final step begins
+        events.append((done, "compute_done", ()))
+        cum = 0.0
+        link_free = None
+        finish = done
+        for leaf in order:
+            cum += leaf_fracs[leaf]
+            ready = t_back + step * cum
+            if link_free is None:
+                link_free = ready + net.latency_s  # stream opens once
+            send = max(ready, link_free)
+            finish = send + leaf_bytes[leaf] / net.bandwidth_Bps
+            link_free = finish
+            events.append((finish, "leaf_arrival", (leaf,)))
+        return events, finish
+
+
+def get_schedule(spec) -> UploadSchedule:
+    """Resolve an upload schedule from a config string (or pass through).
+
+    Accepted specs: "blocking" (default) | "streaming" / "stream".
+    """
+    if isinstance(spec, UploadSchedule):
+        return spec
+    if spec in (None, "blocking", "block"):
+        return BlockingSchedule()
+    if spec in ("streaming", "stream"):
+        return StreamingSchedule()
+    raise ValueError(f"unknown upload schedule spec: {spec!r}")

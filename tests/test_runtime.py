@@ -272,13 +272,26 @@ def test_async_rejected_by_vmap_simulator(golden_problem):
 def test_async_and_adaptive_rejected_by_driver():
     """The pjit driver's (train_step, sync_step) contract is a barriered
     fixed-schedule round — it must refuse rather than silently run the
-    wrong semantics under the right algorithm name."""
+    wrong semantics under the right algorithm name, and the refusal must
+    name the offending policy and point at the backend that CAN run it."""
     from repro.core.stl_sgd import StagewiseDriver
 
-    for algo in ("local+async", "adaptive"):
-        with pytest.raises(ValueError, match="StagewiseDriver"):
-            StagewiseDriver(TrainConfig(algo=algo), lambda s, b, e: (s, {}),
-                            lambda s: s)
+    with pytest.raises(ValueError) as ei:
+        StagewiseDriver(TrainConfig(algo="local+async"),
+                        lambda s, b, e: (s, {}), lambda s: s)
+    msg = str(ei.value)
+    assert "AsyncPeriod" in msg           # names the policy
+    assert "local+async" in msg           # names the algorithm
+    assert "EventBackend" in msg          # points at the right backend
+    assert "runtime" in msg
+
+    with pytest.raises(ValueError) as ei:
+        StagewiseDriver(TrainConfig(algo="adaptive"),
+                        lambda s, b, e: (s, {}), lambda s: s)
+    msg = str(ei.value)
+    assert "AdaptivePeriod" in msg
+    assert "adaptive" in msg
+    assert "simulate.run" in msg or "EventBackend" in msg
 
 
 def test_async_run_rejects_explicit_topology(golden_problem):

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Docs link checker — CI gate for docs/*.md (and README.md).
+
+Verifies that every relative markdown link resolves to an existing file,
+and that every anchor link (`#heading` or `file.md#heading`) points at a
+heading that actually exists in the target file (GitHub slug rules:
+lowercase, spaces -> dashes, punctuation dropped). External links
+(http/https/mailto) are not fetched.
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    h = re.sub(r"[^\w\s-]", "", h, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", h.strip())
+
+
+def heading_slugs(path: Path) -> set:
+    return {slugify(m.group(1))
+            for m in HEADING_RE.finditer(path.read_text())}
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    for m in LINK_RE.finditer(path.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = (path.parent / file_part).resolve() if file_part else path
+        if not dest.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link {target!r}"
+                          f" (no such file {file_part!r})")
+            continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in heading_slugs(dest):
+                errors.append(
+                    f"{path.relative_to(ROOT)}: broken anchor {target!r} "
+                    f"(no heading slug {anchor!r} in "
+                    f"{dest.relative_to(ROOT)})")
+    return errors
+
+
+def main() -> int:
+    files = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        print(f"missing expected docs files: {missing}")
+        return 1
+    errors = []
+    n_links = 0
+    for f in files:
+        n_links += len(LINK_RE.findall(f.read_text()))
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(files)} files, {n_links} links: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
