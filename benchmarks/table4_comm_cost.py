@@ -11,9 +11,17 @@ The claim under test: int8 / top-k reducers cut modeled bytes ≥ 3× while
 landing within 5% of the dense final objective (error feedback absorbs the
 compression bias).
 
+A hierarchical pair of rows rides along (PR 5): the same stl_sc schedule
+over 2 pods (dense intra-pod ICI + int8-EF inter-pod WAN), once through
+the vmapped simulator and once through the ``StagewiseDriver`` — whose
+sync step now emits the real two-level round — asserting the two
+front-ends report identical rounds and bit-identical modeled bytes.
+
     PYTHONPATH=src python -m benchmarks.table4_comm_cost [--full]
 """
 from __future__ import annotations
+
+import itertools
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +29,10 @@ import jax.numpy as jnp
 from benchmarks.common import print_table, save_artifact, save_bench
 from repro.comm import NetworkModel, comm_summary_for
 from repro.configs.base import TrainConfig
+from repro.core import local_sgd as LS
 from repro.core import simulate
+from repro.core.stl_sgd import StagewiseDriver, driver_state, \
+    make_client_sgd_step
 from repro.data import make_binary_classification, partition_iid
 from repro.models import logreg
 
@@ -61,6 +72,51 @@ def algo_cfg(algo: str, quick: bool, reducer: str) -> TrainConfig:
     return TrainConfig(algo=algo, T1=T1 // 4, k1=2.0, n_stages=6, **kw)
 
 
+def run_hierarchical(loss_fn, eval_fn, p0, data, n_clients: int,
+                     quick: bool):
+    """The hierarchical column pair: simulator vs driver, same config.
+
+    Returns two rows. Rounds must match (same stage stream) and modeled
+    bytes must be bit-identical (both front-ends price the same
+    ``engine.Hierarchical`` topology — the driver's from its executed
+    two-level sync step's tags); asserted here so the bench doubles as the
+    smoke test for the hierarchical driver path.
+    """
+    T1 = 512 if quick else 2048
+    cfg = TrainConfig(algo="stl_sc", eta1=0.5, T1=T1 // 4, k1=2.0,
+                      n_stages=6, iid=True, batch_per_client=32, seed=0,
+                      topology="hier", reducer="dense", inter_reducer="int8",
+                      n_pods=2)
+    hist = simulate.run(loss_fn, p0, data, cfg, eval_fn, eval_every=64)
+    summ = comm_summary_for(cfg, p0, n_clients, hist[-1].round)
+    sim_row = {"algo": "stl_sc/hier", "reducer": summ["reducer"],
+               "backend": "simulator", "rounds": hist[-1].round,
+               "iters": hist[-1].iteration, "final_obj": hist[-1].value,
+               "comm_bytes": summ["total_bytes"],
+               "comm_time_s": summ["total_time_s"]}
+
+    train_step = make_client_sgd_step(loss_fn, data, batch=32)
+    sync_step = LS.build_sync_step("dense", hierarchical=True, n_pods=2,
+                                   inter_reducer="int8")
+    ds = StagewiseDriver(cfg, jax.jit(train_step), jax.jit(sync_step)).run(
+        driver_state(p0, n_clients), itertools.repeat(None))
+    obj = float(eval_fn(jax.tree.map(lambda x: x[0], ds.state["params"])))
+    drv_row = {"algo": "stl_sc/hier", "reducer": summ["reducer"],
+               "backend": "driver", "rounds": ds.rounds_total,
+               "iters": ds.iters_total, "final_obj": obj,
+               "comm_bytes": ds.comm_bytes_total,
+               "comm_time_s": ds.comm_time_s}
+    assert drv_row["rounds"] == sim_row["rounds"], (drv_row, sim_row)
+    assert drv_row["comm_bytes"] == sim_row["comm_bytes"], (drv_row, sim_row)
+    assert sum(l["bytes"] for l in ds.leaf_ledger) == ds.comm_bytes_total
+    for r in (sim_row, drv_row):
+        print(f"  {r['algo']:12s} {r['reducer']:10s} [{r['backend']:9s}] "
+              f"rounds={r['rounds']:>6} bytes={r['comm_bytes']:.3e} "
+              f"t={r['comm_time_s']:.2f}s obj={r['final_obj']:.6f}",
+              flush=True)
+    return [sim_row, drv_row]
+
+
 def run(quick: bool = True):
     n_clients = 8 if quick else 32
     loss_fn, eval_fn, p0, data = make_problem(quick, n_clients)
@@ -94,9 +150,12 @@ def run(quick: bool = True):
                   f"obj={row['final_obj']:.6f} ({row['bytes_x']}, "
                   f"drift {row['obj_drift']})", flush=True)
             rows.append(row)
+    rows.extend(run_hierarchical(loss_fn, eval_fn, p0, data, n_clients,
+                                 quick))
     print_table("Table 4 — communication cost (rounds × bytes × modeled time)",
-                rows, ["algo", "reducer", "rounds", "iters", "final_obj",
-                       "comm_bytes", "comm_time_s", "bytes_x", "obj_drift"])
+                rows, ["algo", "reducer", "backend", "rounds", "iters",
+                       "final_obj", "comm_bytes", "comm_time_s", "bytes_x",
+                       "obj_drift"])
     bad = [r for r in rows if r.get("ok") is False]
     assert not bad, f"compressed reducers missed the bytes/objective bar: {bad}"
     save_artifact("table4_comm_cost", rows)

@@ -10,20 +10,35 @@ over the slow WAN. The engine's ``Hierarchical`` topology composes the two
 the TrainConfig default (5 ms, 1 Gbit/s).
 
 The run compares flat-dense / flat-int8 / hierarchical on the same
-STL-SGD^sc schedule and prints the per-hop modeled comm time for each.
+STL-SGD^sc schedule and prints the per-hop modeled comm time for each,
+then executes the same hierarchical config through the pjit-style
+``StagewiseDriver`` — whose sync step emits the *real* two-level round
+(``build_sync_step(hierarchical=True)``, see docs/topologies.md) — and
+asserts the driver's executed byte ledger agrees with the modeled
+``Hierarchical`` tree totals bit-exactly.
 
-    PYTHONPATH=src python examples/hierarchical_pods.py
+    PYTHONPATH=src python examples/hierarchical_pods.py [--driver]
+
+``--driver`` skips the (slower) simulator comparison and runs only the
+driver section — the CI smoke path for the hierarchical driver.
 """
+import itertools
+import sys
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
+from repro.core import local_sgd as LS
 from repro.core import simulate
+from repro.core.stl_sgd import StagewiseDriver, driver_state, \
+    make_client_sgd_step
 from repro.data import make_binary_classification, partition_iid
 from repro.engine import topology_for
 from repro.models import logreg
 
 N_CLIENTS, N_PODS = 8, 2
+DRIVER_ONLY = "--driver" in sys.argv
 
 x, y = make_binary_classification(n=4096, d=64, seed=0)
 lam = 1e-3
@@ -50,22 +65,61 @@ CONFIGS = [
 
 print(f"f* = {fstar:.6f}; STL-SGD^sc, {N_CLIENTS} clients"
       f" ({N_PODS} pods of {N_CLIENTS // N_PODS})\n")
-for name, kw in CONFIGS:
-    cfg = TrainConfig(algo="stl_sc", eta1=0.5, T1=256, k1=8.0, n_stages=8,
-                      iid=True, batch_per_client=32, seed=0, **kw)
-    hist = simulate.run(loss_fn, p0, data, cfg, eval_fn, eval_every=8)
-    summ = topology_for(cfg).summary(p0, N_CLIENTS, hist[-1].round)
-    gap = hist[-1].value - fstar
-    print(f"{name:16s} rounds={summ['rounds']:4d} "
-          f"bytes={summ['total_bytes']:9d} "
-          f"modeled_comm={summ['total_time_s']:7.3f}s final_gap={gap:.2e}")
-    for hop in summ["hops"]:
-        print(f"  └ {hop['hop']:10s} [{hop['reducer']:5s}] "
-              f"α={hop['latency_s']:.0e}s β⁻¹={hop['bandwidth_gbps']:.0f}Gbps "
-              f"bytes/round={hop['bytes_per_round']:6d} "
-              f"hop_time={hop['total_time_s']:.4f}s")
+if not DRIVER_ONLY:
+    for name, kw in CONFIGS:
+        cfg = TrainConfig(algo="stl_sc", eta1=0.5, T1=256, k1=8.0,
+                          n_stages=8, iid=True, batch_per_client=32, seed=0,
+                          **kw)
+        hist = simulate.run(loss_fn, p0, data, cfg, eval_fn, eval_every=8)
+        summ = topology_for(cfg).summary(p0, N_CLIENTS, hist[-1].round)
+        gap = hist[-1].value - fstar
+        print(f"{name:16s} rounds={summ['rounds']:4d} "
+              f"bytes={summ['total_bytes']:9d} "
+              f"modeled_comm={summ['total_time_s']:7.3f}s final_gap={gap:.2e}")
+        for hop in summ["hops"]:
+            print(f"  └ {hop['hop']:10s} [{hop['reducer']:5s}] "
+                  f"α={hop['latency_s']:.0e}s "
+                  f"β⁻¹={hop['bandwidth_gbps']:.0f}Gbps "
+                  f"bytes/round={hop['bytes_per_round']:6d} "
+                  f"hop_time={hop['total_time_s']:.4f}s")
 
-print("\nThe hierarchical round keeps the dense average where bandwidth is")
-print("free (intra-pod ICI) and compresses only the WAN hop — composing the")
-print("paper's axis (fewer rounds via stagewise k_s) with cheaper rounds on")
-print("the links that actually cost something.")
+    print("\nThe hierarchical round keeps the dense average where bandwidth")
+    print("is free (intra-pod ICI) and compresses only the WAN hop —")
+    print("composing the paper's axis (fewer rounds via stagewise k_s) with")
+    print("cheaper rounds on the links that actually cost something.")
+
+# --- driver section: the same two-level round, executed by the pjit driver
+#
+# The StagewiseDriver's sync step now EMITS the hierarchical round
+# (dense intra-pod reduce + int8-EF inter-pod hop — engine.Hierarchical's
+# reduce, one shared code path with the simulator above), and the engine
+# prices the run through the same Hierarchical topology. Executed and
+# modeled bytes therefore must agree bit-exactly — asserted below.
+
+print(f"\n--- StagewiseDriver, topology=hier (2-level sync round) ---")
+dcfg = TrainConfig(algo="stl_sc", eta1=0.5, T1=64, k1=8.0, n_stages=4,
+                   iid=True, batch_per_client=32, seed=0, topology="hier",
+                   reducer="dense", inter_reducer="int8", n_pods=N_PODS)
+
+train_step = make_client_sgd_step(loss_fn, data, batch=32)
+sync_step = LS.build_sync_step("dense", hierarchical=True, n_pods=N_PODS,
+                               inter_reducer="int8")
+drv = StagewiseDriver(dcfg, jax.jit(train_step), jax.jit(sync_step))
+ds = drv.run(driver_state(p0, N_CLIENTS),
+             itertools.repeat(None))  # train_step samples via rng
+
+consensus = jax.tree.map(lambda x: x[0], ds.state["params"])
+gap = float(eval_fn(consensus)) - fstar
+topo = topology_for(dcfg)
+modeled = topo.round_bytes(p0, N_CLIENTS) * ds.rounds_total
+print(f"driver hier     rounds={ds.rounds_total:4d} "
+      f"bytes={ds.comm_bytes_total:9d} "
+      f"modeled_comm={ds.comm_time_s:7.3f}s final_gap={gap:.2e}")
+for l in ds.leaf_ledger:
+    print(f"  └ {l['hop']:10s} leaf {l['path']:9s} bytes={l['bytes']:8d} "
+          f"time={l['time_s']:.4f}s")
+assert ds.comm_bytes_total == modeled, (ds.comm_bytes_total, modeled)
+assert sum(l["bytes"] for l in ds.leaf_ledger) == ds.comm_bytes_total
+print("\nmodeled-vs-executed byte agreement: OK "
+      f"({ds.comm_bytes_total} bytes over {ds.rounds_total} two-level "
+      "rounds; ledger == Hierarchical tree totals bit-exactly)")

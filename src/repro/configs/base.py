@@ -147,6 +147,13 @@ class TrainConfig:
     # parameter-server setting; "hier" splits clients into n_pods pods —
     # ``reducer`` runs intra-pod over calibrated ICI, ``inter_reducer``
     # inter-pod over the comm_latency_s/comm_bandwidth_gbps WAN link.
+    # Honored by both front-ends: the vmapped simulator reduces through
+    # engine.Hierarchical, and the StagewiseDriver executes the same
+    # two-level round via a local_sgd.build_sync_step(hierarchical=True,
+    # n_pods=..., inter_reducer=...) sync step (whose tags must agree with
+    # these fields — the driver refuses mismatches so the ledger always
+    # prices the round the collectives execute). n_pods=1 degenerates to
+    # the flat star round bit-exactly (no inter-pod link exists).
     topology: str = "star"
     n_pods: int = 2
     inter_reducer: str = "int8"

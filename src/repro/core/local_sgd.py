@@ -11,10 +11,18 @@ The paper's clients map to a mesh axis (DESIGN.md §2/§4):
   * ``sync_step`` — Algorithm 1 line 5: the parameter-averaging round. One
     all-reduce of params (+ optimizer moments) over the client axis.
 
-  * hierarchical mode (``client_axis="pod"``): grads are additionally
-    all-reduced over ``data`` *inside* the local step (SyncSGD within a pod
-    over fast ICI), while the stagewise schedule governs only the expensive
-    inter-pod parameter average. This is the beyond-paper deployment mode.
+  * two-level sync (``client_axis=("pod", "data")`` + ``inter_reducer``):
+    the paper's clients live on the pod×data grid and every sync runs the
+    real hierarchical round — a dense intra-pod reduce over ``data``
+    followed by a (typically compressed) inter-pod hop over ``pod`` — via
+    ``build_sync_step(hierarchical=True)``, the same ``engine.Hierarchical``
+    reduce the simulator executes (see docs/topologies.md).
+
+  * hierarchical pod-client mode (``client_axis="pod"``): grads are
+    additionally all-reduced over ``data`` *inside* the local step (SyncSGD
+    within a pod over fast ICI), while the stagewise schedule governs only
+    the expensive inter-pod parameter average. This is the beyond-paper
+    deployment mode.
 
 All builders return *lowerable* jitted callables — the multi-pod dry-run
 compiles exactly these.
@@ -64,7 +72,12 @@ def batch_spec(cfg: ArchConfig, client_axis: Optional[str], extra_data_axis: boo
     """
     axes = []
     if client_axis:
-        axes.append(client_axis)
+        # multi-axis client grids (("pod", "data") on a multi-pod mesh)
+        # shard the one leading client dim over all their mesh axes
+        if isinstance(client_axis, (tuple, list)):
+            axes.extend(client_axis)
+        else:
+            axes.append(client_axis)
     if extra_data_axis:
         axes.append("data")
     lead = tuple(axes) if axes else None
@@ -75,7 +88,8 @@ def batch_spec(cfg: ArchConfig, client_axis: Optional[str], extra_data_axis: boo
 
 
 def build_sync_step(reducer=None, *, base_seed: int = 0,
-                    streaming: bool = False):
+                    streaming: bool = False, hierarchical: bool = False,
+                    n_pods: int = 2, inter_reducer="int8"):
     """Reducer-aware Algorithm 1 line 5: the parameter-averaging round.
 
     Returns ``sync_step(state) -> state``. With the default DenseMean this is
@@ -96,9 +110,42 @@ def build_sync_step(reducer=None, *, base_seed: int = 0,
     per-leaf data-independent ops, so when the step runs under jit XLA's
     scheduler is free to interleave leaf l's reduce with the remaining
     leaves' compute instead of waiting on one whole-tree collective.
+
+    ``hierarchical=True`` emits the *two-level* round
+    (``engine.Hierarchical`` semantics, see ``docs/topologies.md``): an
+    intra-pod reduce with ``reducer`` (dense by default — the hop rides
+    cheap ICI) followed by an inter-pod reduce of the ``n_pods`` pod means
+    with ``inter_reducer`` (int8-EF by default — the hop crosses the WAN).
+    Clients are pods' contiguous slices of the leading client axis, the
+    layout a ``(pod, data, model)`` mesh shards pod-major, so under pjit
+    the intra hop's collectives stay on the ``data`` axis and the inter
+    hop's on the ``pod`` axis — the driver's collectives structurally
+    match what the ``Hierarchical`` cost model prices. The round *is*
+    ``Hierarchical.reduce`` (one shared code path), so it is bit-exact
+    with the simulator's hierarchical trace on the same rng; per-hop
+    error-feedback residuals ride in ``state["comm"]``. Degenerate cases
+    keep the flat contract exactly: ``n_pods=1`` (no inter-pod link
+    exists) and dense∘dense (the two-level mean collapses to the flat
+    mean) both produce the flat round bit-exactly.
     """
     reducer = get_reducer(reducer)
     dense = isinstance(reducer, DenseMean)
+
+    if hierarchical:
+        if streaming:
+            raise ValueError(
+                "streaming=True composes the per-leaf round with a flat "
+                "star; streaming the hierarchical inter-pod hop is not "
+                "implemented yet (ROADMAP: 'Streaming beyond the uplink')")
+        if n_pods < 1:
+            raise ValueError(f"n_pods must be >= 1, got {n_pods}")
+        if n_pods > 1:
+            return _build_two_level_sync_step(reducer, n_pods, inter_reducer,
+                                              base_seed)
+        # n_pods == 1: a single pod has no inter-pod hop to cross — the
+        # round degenerates to the flat round with the intra reducer
+        # (bit-exact with the flat path by construction; the inter
+        # reducer is unused because no WAN link exists)
 
     def sync_step(state):
         n = jax.tree.leaves(state["params"])[0].shape[0]
@@ -132,6 +179,54 @@ def build_sync_step(reducer=None, *, base_seed: int = 0,
     # actually transmits
     sync_step.reducer = reducer
     sync_step.streaming = streaming
+    sync_step.hierarchical = False
+    return sync_step
+
+
+def _build_two_level_sync_step(intra, n_pods: int, inter_reducer,
+                               base_seed: int):
+    """The hierarchical (n_pods > 1) round behind ``build_sync_step``.
+
+    One ``engine.Hierarchical.reduce`` per sync — the same code path the
+    vmapped simulator executes for ``topology="hier"`` — with the per-hop
+    reducer state riding in ``state["comm"]`` (created on first sync, like
+    the flat compressed round). The dense∘dense configuration keeps the
+    state tree untouched: ``Hierarchical`` collapses it to the flat mean
+    and its reducer state is inert, so the round matches the flat dense
+    round exactly, key set included.
+    """
+    from repro.engine.topology import Hierarchical
+
+    inter = get_reducer(inter_reducer)
+    topo = Hierarchical(n_pods=n_pods, intra=intra, inter=inter)
+
+    def sync_step(state):
+        n = jax.tree.leaves(state["params"])[0].shape[0]
+        if n % n_pods:
+            # concrete at trace time — same contract as Hierarchical
+            raise ValueError(
+                f"{n} client replicas not divisible into {n_pods} pods")
+        opt = tree_broadcast_leading(tree_mean_leading(state["opt"]), n)
+        rng = jax.random.fold_in(jax.random.key(base_seed), state["step"])
+        if topo.all_dense:
+            consensus, _ = topo.reduce(state["params"], None, rng)
+            out = dict(state,
+                       params=tree_broadcast_leading(consensus, n), opt=opt)
+        else:
+            comm = state.get("comm")
+            if comm is None:
+                comm = topo.init_state(state["params"])
+            consensus, comm = topo.reduce(state["params"], comm, rng)
+            out = dict(state, params=tree_broadcast_leading(consensus, n),
+                       opt=opt, comm=comm)
+        return out
+
+    # tags: the driver prices the topology the round actually executes
+    sync_step.reducer = intra
+    sync_step.streaming = False
+    sync_step.hierarchical = True
+    sync_step.n_pods = n_pods
+    sync_step.inter_reducer = inter
     return sync_step
 
 
@@ -143,6 +238,7 @@ def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
                       sync_grads: bool = False,
                       reducer=None,
                       streaming: bool = False,
+                      inter_reducer=None,
                       donate: bool = True):
     """Returns (train_step_local, sync_step, specs) for the given mesh.
 
@@ -157,9 +253,37 @@ def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
     gradient-accumulation slices (scan), dividing activation memory.
     In hierarchical mode (client_axis="pod") the per-client gradient is
     additionally pmean'd over "data" inside the local step.
+
+    ``inter_reducer`` (with a client axis spanning "pod", e.g.
+    ``client_axis=("pod", "data")`` on a multi-pod mesh) selects the
+    *two-level* sync round: the paper's clients live on the pod×data grid
+    and every sync runs a dense intra-pod reduce over ``data`` followed by
+    an ``inter_reducer`` round over the ``pod`` axis (int8-EF WAN by
+    default) — ``build_sync_step(hierarchical=True)`` with ``n_pods``
+    taken from the mesh. ``None`` (default) keeps the historical flat
+    client-axis average.
     """
     loss_fn = loss_fn or lm_loss
     hierarchical = client_axis == "pod"
+    two_level = inter_reducer is not None
+    if two_level:
+        if streaming:
+            # same refusal as build_sync_step/StagewiseDriver — the flag
+            # must not be silently dropped
+            raise ValueError(
+                "streaming=True composes the per-leaf round with a flat "
+                "star; streaming the hierarchical inter-pod hop is not "
+                "implemented yet (ROADMAP: 'Streaming beyond the uplink')")
+        axes = (client_axis if isinstance(client_axis, (tuple, list))
+                else (client_axis,))
+        if "pod" not in axes or "pod" not in mesh.axis_names:
+            raise ValueError(
+                f"inter_reducer={inter_reducer!r} requests the two-level "
+                f"sync round, but client_axis={client_axis!r} on a mesh "
+                f"with axes {tuple(mesh.axis_names)} has no 'pod' axis to "
+                f"cross — use client_axis=('pod', 'data') on a multi-pod "
+                f"mesh")
+        n_pods = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
     opt_init, opt_update = make_optimizer(optimizer, momentum, weight_decay)
 
     def per_client_grad(params, batch):
@@ -213,7 +337,10 @@ def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
         return dict(state, params=params, opt=opt, step=state["step"] + 1), {
             "loss": jnp.mean(loss)}
 
-    sync_step = build_sync_step(reducer, streaming=streaming)
+    sync_step = (build_sync_step(reducer, hierarchical=True, n_pods=n_pods,
+                                 inter_reducer=inter_reducer)
+                 if two_level else
+                 build_sync_step(reducer, streaming=streaming))
 
     return train_step_local, sync_step, per_client_step
 

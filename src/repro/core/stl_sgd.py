@@ -21,15 +21,59 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.comm import NetworkModel, get_reducer
+from repro.comm import NetworkModel, get_reducer, link_model
 from repro.configs.base import TrainConfig
 from repro.engine.algorithm import get_algorithm
 from repro.engine.engine import Engine, StageStatus
-from repro.engine.topology import Star, StreamingStar
-from repro.utils.tree import tree_mean_leading
+from repro.engine.topology import Hierarchical, Star, StreamingStar
+from repro.utils.tree import tree_broadcast_leading, tree_mean_leading
 from repro.utils.logging import get_logger
 
 log = get_logger("stl_sgd")
+
+
+def driver_state(params, n_clients: int) -> dict:
+    """Stacked {"params", "opt", "step"} driver state from one replica.
+
+    The state layout ``StagewiseDriver`` and ``local_sgd.build_sync_step``
+    expect: every client starts from the same ``params``, momentum buffers
+    zeroed, step counter 0.
+    """
+    stacked = tree_broadcast_leading(params, n_clients)
+    return {"params": stacked,
+            "opt": {"mu": jax.tree.map(jnp.zeros_like, stacked)},
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_client_sgd_step(loss_fn, client_data, batch: int, seed: int = 1):
+    """Ready-made ``train_step`` over stacked client data shards.
+
+    One vmapped minibatch SGD step per client on its own shard of
+    ``client_data`` (a pytree with leading client axis); the minibatch rng
+    derives from ``state["step"]`` so the step is pure and the batch
+    stream needs no real payload (drive the driver with
+    ``itertools.repeat(None)``). The harness behind the hierarchical
+    driver demos (``examples/hierarchical_pods.py``,
+    ``benchmarks/table4_comm_cost.py``).
+    """
+    n_clients = jax.tree.leaves(client_data)[0].shape[0]
+
+    def train_step(state, _, eta):
+        def client(p, d, r):
+            n = jax.tree.leaves(d)[0].shape[0]
+            idx = jax.random.randint(r, (batch,), 0, n)
+            b = jax.tree.map(lambda a: a[idx], d)
+            loss, g = jax.value_and_grad(lambda q: loss_fn(q, b))(p)
+            return jax.tree.map(lambda a, gg: a - eta * gg, p, g), loss
+
+        rngs = jax.random.split(
+            jax.random.fold_in(jax.random.key(seed), state["step"]),
+            n_clients)
+        params, losses = jax.vmap(client)(state["params"], client_data, rngs)
+        return dict(state, params=params, step=state["step"] + 1), {
+            "loss": jnp.mean(losses)}
+
+    return train_step
 
 
 @dataclass
@@ -123,6 +167,16 @@ class StagewiseDriver:
 
     train_step(state, batch, eta[, center]) -> (state, metrics)
     sync_step(state) -> state
+
+    The sync round's *shape* follows the sync_step's tags (set by
+    ``local_sgd.build_sync_step``; explicit args and ``tcfg.topology``
+    must agree with them): flat star (default), per-leaf streaming star
+    (``streaming=True``), or the two-level hierarchical round
+    (``hierarchical=True`` — dense intra-pod over ``data``, compressed
+    inter-pod over ``pod``; ``tcfg.n_pods`` / ``tcfg.inter_reducer``).
+    The engine then prices exactly that topology, so
+    ``DriverState.comm_bytes_total`` and the per-(leaf, hop)
+    ``leaf_ledger`` always describe the collectives the run emitted.
     """
 
     def __init__(self, tcfg: TrainConfig, train_step: Callable,
@@ -136,32 +190,77 @@ class StagewiseDriver:
         # reducer the sync_step itself was built with (local_sgd.
         # build_sync_step tags it, surviving jax.jit via __wrapped__) >
         # tcfg.reducer. The tag keeps accounting from silently diverging
-        # from what the round actually transmits — which is also why the
-        # driver always prices a Star topology: sync_step transmits flat.
+        # from what the round actually transmits — the driver prices
+        # exactly the topology the sync_step executes (flat star,
+        # per-leaf streaming star, or the two-level hierarchical round).
+        def tag(name, default=None):
+            v = getattr(sync_step, name, None)
+            if v is None:
+                v = getattr(getattr(sync_step, "__wrapped__", None), name,
+                            None)
+            return default if v is None else v
+
         if reducer is None:
-            reducer = getattr(sync_step, "reducer", None) or getattr(
-                getattr(sync_step, "__wrapped__", None), "reducer", None)
+            reducer = tag("reducer")
         self.reducer = get_reducer(
             reducer if reducer is not None else tcfg.reducer,
             quant_bits=tcfg.quant_bits, topk_frac=tcfg.topk_frac)
         topo_spec = getattr(tcfg, "topology", "star")
+        hier_spec = topo_spec in ("hier", "hierarchical", "pods")
         # a sync_step built with build_sync_step(streaming=True) implies the
         # per-leaf round even when the config says plain "star"
         self.streaming = (topo_spec in ("streaming", "streaming-star",
                                         "stream")
-                          or bool(getattr(sync_step, "streaming", False)
-                                  or getattr(getattr(sync_step, "__wrapped__",
-                                                     None), "streaming",
-                                             False)))
-        if topo_spec not in (None, "star", "flat", "streaming",
-                             "streaming-star", "stream"):
-            # sync_step transmits a flat client-axis average; accepting a
-            # hierarchical config here would make the driver's ledger and
-            # comm_summary_for price different topologies for one run.
+                          or bool(tag("streaming", False)))
+        # ... and a hierarchical-tagged sync_step implies the two-level
+        # round the same way. cfg n_pods=1 is the flat degenerate case
+        # (no inter-pod link exists; build_sync_step emits the flat round).
+        self.hierarchical = bool(tag("hierarchical", False)) or (
+            hier_spec and getattr(tcfg, "n_pods", 2) > 1)
+        if self.hierarchical:
+            if self.streaming:
+                raise ValueError(
+                    "streaming the hierarchical inter-pod hop is not "
+                    "implemented yet (ROADMAP: 'Streaming beyond the "
+                    "uplink') — use topology='hier' with a blocking sync "
+                    "step or topology='streaming' with a flat one")
+            if not tag("hierarchical", False):
+                # cfg promises a two-level round but the step transmits a
+                # flat average: pricing Hierarchical would ledger bytes
+                # the collectives never move.
+                raise ValueError(
+                    f"topology={tcfg.topology!r} needs a two-level sync "
+                    f"step: build it with local_sgd.build_sync_step("
+                    f"reducer, hierarchical=True, n_pods={tcfg.n_pods}, "
+                    f"inter_reducer={tcfg.inter_reducer!r})")
+            n_pods = tag("n_pods")
+            if hier_spec and n_pods != tcfg.n_pods:
+                raise ValueError(
+                    f"sync_step reduces over {n_pods} pods but the config "
+                    f"says n_pods={tcfg.n_pods}; the ledger would price a "
+                    f"different topology than the round executes")
+            self.n_pods = n_pods
+            self.inter_reducer = get_reducer(
+                tag("inter_reducer", getattr(tcfg, "inter_reducer", "int8")),
+                quant_bits=tcfg.quant_bits, topk_frac=tcfg.topk_frac)
+            cfg_inter = get_reducer(getattr(tcfg, "inter_reducer", "int8"),
+                                    quant_bits=tcfg.quant_bits,
+                                    topk_frac=tcfg.topk_frac)
+            if hier_spec and tag("inter_reducer") is not None \
+                    and self.inter_reducer.name != cfg_inter.name:
+                # same contract as the n_pods check: cfg-derived reports
+                # (comm_summary_for) and the executed ledger must price
+                # the same WAN hop
+                raise ValueError(
+                    f"sync_step compresses the inter-pod hop with "
+                    f"{self.inter_reducer.name!r} but the config says "
+                    f"inter_reducer={tcfg.inter_reducer!r}; the ledger "
+                    f"would price a different round than the one executed")
+        elif topo_spec not in (None, "star", "flat", "streaming",
+                               "streaming-star", "stream") and not hier_spec:
             raise ValueError(
-                f"StagewiseDriver executes a flat sync round; "
-                f"topology={tcfg.topology!r} is only supported by the "
-                f"simulator backend (core.simulate.run)")
+                f"unknown topology spec for StagewiseDriver: "
+                f"{tcfg.topology!r} (expected star/streaming/hierarchical)")
         self.net = NetworkModel(latency_s=tcfg.comm_latency_s,
                                 bandwidth_gbps=tcfg.comm_bandwidth_gbps)
         self.algorithm = get_algorithm(tcfg.algo)
@@ -192,10 +291,18 @@ class StagewiseDriver:
         # a fresh Engine per run: its report is the run's comm ledger.
         # Streaming rounds price identically to Star (same bytes, same
         # serial α–β time) but additionally carry the per-leaf ledger.
-        topo_cls = StreamingStar if self.streaming else Star
-        engine = Engine(self.algorithm, self.tcfg,
-                        topology=topo_cls(reducer=self.reducer,
-                                          network=self.net))
+        # Hierarchical rounds price per hop: calibrated ICI intra-pod,
+        # the config's α–β link inter-pod — the same two hops the tagged
+        # sync_step executes, so modeled and executed bytes cannot diverge.
+        if self.hierarchical:
+            topology = Hierarchical(n_pods=self.n_pods, intra=self.reducer,
+                                    inter=self.inter_reducer,
+                                    intra_net=link_model("ici"),
+                                    inter_net=self.net)
+        else:
+            topo_cls = StreamingStar if self.streaming else Star
+            topology = topo_cls(reducer=self.reducer, network=self.net)
+        engine = Engine(self.algorithm, self.tcfg, topology=topology)
         ds = engine.run(DriverBackend(self, ds, batches, max_iters))
         log.info("comm: reducer=%s rounds=%d bytes=%.3e modeled_time=%.3fs",
                  self.reducer.name, ds.rounds_total, ds.comm_bytes_total,

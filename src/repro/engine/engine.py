@@ -6,7 +6,10 @@
   * ``core.simulate.VmapSimulatorBackend`` — N vmapped client replicas on
     one host (the paper-fidelity convergence engine);
   * ``core.stl_sgd.DriverBackend`` — pjit step functions over a mesh client
-    axis (the production trainer).
+    axis (the production trainer). Accepts every topology, including
+    ``topology="hierarchical"``: the driver's two-level sync step executes
+    the same ``Hierarchical.reduce`` the simulator runs, and the per-round
+    / per-(leaf, hop) ledger below prices exactly those two hops.
 
 Both front-ends therefore provably run the same schedule, the same
 prox-center policy, and the same topology-priced communication accounting —

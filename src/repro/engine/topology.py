@@ -209,9 +209,28 @@ class Hierarchical(Topology):
     reduce over the pod means (slow link).
 
     The client axis must be divisible by ``n_pods``. Pod p's replicas are
-    the contiguous slice [p·m, (p+1)·m). Both levels keep their own reducer
-    state (error-feedback residuals live per level), so e.g. a dense ICI
-    average composes with an int8-EF WAN round.
+    the contiguous slice [p·m, (p+1)·m) of the leading client axis — the
+    layout a ``(pod, data, model)`` mesh shards pod-major, so when the
+    stacked replica tree is sharded ``P(("pod", "data"), ...)`` this reduce
+    *is* the driver's two-level round: the intra hop (a reshaped mean over
+    the per-pod slice) lowers to collectives on the ``data`` mesh axis
+    only, and the inter hop (``inter.reduce`` over the ``n_pods`` stacked
+    pod means) to collectives on the ``pod`` axis only.
+    ``local_sgd.build_sync_step(hierarchical=True)`` executes exactly this
+    method, so the driver's collectives and the simulator's hierarchical
+    trace are the same code path (bit-exact on the same rng).
+
+    Both levels keep their own reducer state (error-feedback residuals
+    live per level), so e.g. a dense ICI average composes with an int8-EF
+    WAN round. Per-round rng discipline: pod p's intra reduce folds
+    ``fold_in(rng, p)``; the inter reduce folds ``fold_in(rng, n_pods)``.
+
+    Dense∘dense collapse: with ``DenseMean`` on *both* hops the two-level
+    round is algebraically the flat mean over all clients (equal-size
+    pods), so it is computed as exactly that — one fused mean. This keeps
+    the dense-WAN two-level round bit-exact with the flat ``Star`` path
+    (the driver's safety-rail contract) instead of merely close to it; the
+    per-hop cost model still prices both hops.
     """
 
     n_pods: int = 2
@@ -222,11 +241,30 @@ class Hierarchical(Topology):
 
     name = "hierarchical"
 
+    @property
+    def all_dense(self) -> bool:
+        """True when both hops are DenseMean — the collapsible case."""
+        return (type(self.intra) is DenseMean
+                and type(self.inter) is DenseMean)
+
     def _pods(self, stacked):
         P = self.n_pods
         return [jax.tree.map(lambda x: x[p * (x.shape[0] // P):
                                          (p + 1) * (x.shape[0] // P)], stacked)
                 for p in range(P)]
+
+    def _pod_means(self, stacked):
+        """Dense intra hop as one reshaped mean: (N, ...) -> (n_pods, ...).
+
+        The reshape splits the client axis pod-major — a layout no-op on a
+        ``P(("pod", "data"))``-sharded axis — so the mean reduces over the
+        ``data`` axis only and never crosses pods.
+        """
+        P = self.n_pods
+        return jax.tree.map(
+            lambda x: jnp.mean(
+                x.reshape((P, x.shape[0] // P) + x.shape[1:]), axis=1),
+            stacked)
 
     def init_state(self, stacked):
         n = jax.tree.leaves(stacked)[0].shape[0]
@@ -234,25 +272,33 @@ class Hierarchical(Topology):
             raise ValueError(
                 f"{n} clients not divisible into {self.n_pods} pods")
         pods = self._pods(stacked)
-        pod_means = [jax.tree.map(lambda x: jnp.mean(x, axis=0), p)
-                     for p in pods]
-        stacked_means = jax.tree.map(lambda *xs: jnp.stack(xs), *pod_means)
         return {"intra": tuple(self.intra.init_state(p) for p in pods),
-                "inter": self.inter.init_state(stacked_means)}
+                "inter": self.inter.init_state(self._pod_means(stacked))}
 
     def reduce(self, stacked, state, rng):
-        pods = self._pods(stacked)
-        means, intra_states = [], []
-        for p, pod in enumerate(pods):
-            m, st = self.intra.reduce(pod, state["intra"][p],
-                                      jax.random.fold_in(rng, p))
-            means.append(m)
-            intra_states.append(st)
-        stacked_means = jax.tree.map(lambda *xs: jnp.stack(xs), *means)
+        if self.all_dense:
+            # see class docstring: dense∘dense ≡ the flat mean, computed
+            # as such so the two-level round is bit-exact with Star
+            return jax.tree.map(lambda x: jnp.mean(x, axis=0),
+                                stacked), state
+        if type(self.intra) is DenseMean:
+            # stateless, rng-free intra hop: one fused per-pod mean whose
+            # collectives stay on the intra-pod (data) axis under pjit
+            stacked_means = self._pod_means(stacked)
+            intra_states = state["intra"]
+        else:
+            means, intra_states = [], []
+            for p, pod in enumerate(self._pods(stacked)):
+                m, st = self.intra.reduce(pod, state["intra"][p],
+                                          jax.random.fold_in(rng, p))
+                means.append(m)
+                intra_states.append(st)
+            stacked_means = jax.tree.map(lambda *xs: jnp.stack(xs), *means)
+            intra_states = tuple(intra_states)
         consensus, inter_state = self.inter.reduce(
             stacked_means, state["inter"],
             jax.random.fold_in(rng, self.n_pods))
-        return consensus, {"intra": tuple(intra_states),
+        return consensus, {"intra": intra_states,
                            "inter": inter_state}
 
     def hop_costs(self, template, n_clients: int) -> List[HopCost]:

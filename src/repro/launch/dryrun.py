@@ -92,6 +92,20 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
                 records.append(_analyse(
                     "sync_step", js.lower(state), mesh, verbose))
 
+            # multi-pod meshes additionally prove the two-level round
+            # lowers: dense intra-pod (data axis) + int8-EF inter-pod
+            # (pod axis) — the collectives engine.Hierarchical prices
+            if (want("sync_step_2level") and "pod" in mesh.axis_names
+                    and not hierarchical):
+                n_pods = mesh_shape_dict(mesh)["pod"]
+                s2 = LS.build_sync_step("dense", hierarchical=True,
+                                        n_pods=n_pods, inter_reducer="int8")
+                # EF residuals join the state on the first sync; shardings
+                # for the new "comm" key follow the params replica layout
+                j2 = jax.jit(s2, in_shardings=(st_sh,))
+                records.append(_analyse(
+                    "sync_step_2level", j2.lower(state), mesh, verbose))
+
             # SyncSGD baseline: same step + gradient all-reduce over clients
             if want("syncsgd_step"):
                 syncsgd_step, _, _ = LS.build_train_steps(

@@ -3,6 +3,19 @@
 single-pod: (16, 16)   axes (data, model)   — 256 chips
 multi-pod : (2, 16, 16) axes (pod, data, model) — 512 chips
 
+Axis semantics (shared by sharding.rules and the engine topologies, see
+docs/topologies.md):
+
+  pod    inter-pod axis — one shard per pod, connected by the slow
+         DCN/WAN links; the hop `engine.Hierarchical` compresses and the
+         two-level sync round (`local_sgd.build_sync_step(
+         hierarchical=True)`) crosses once per round.
+  data   intra-pod client/batch axis — the paper's N clients live on the
+         (pod × data) grid pod-major, so a leading client dim sharded
+         ``P(("pod", "data"))`` puts each pod's clients on one contiguous
+         slice and the intra-pod reduce on cheap ICI.
+  model  tensor-parallel axis (heads / ffn / experts / vocab).
+
 ``make_production_mesh`` is a FUNCTION so importing this module never touches
 jax device state; the dry-run sets XLA_FLAGS for 512 host devices before any
 jax import, everything else sees the real 1-CPU topology.
@@ -44,8 +57,23 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return _make_mesh((data, model), ("data", "model"))
 
 
+def make_host_pod_mesh(pods: int = 2, data: int = 1, model: int = 1):
+    """Small (pod, data, model) mesh for tests / CPU runs.
+
+    The host-device miniature of the multi-pod production mesh: same axis
+    names, so the two-level sync round and its HLO collective analysis run
+    under ``--xla_force_host_platform_device_count`` exactly as they would
+    on pods (requires ``pods * data * model`` host devices).
+    """
+    return _make_mesh((pods, data, model), ("pod", "data", "model"))
+
+
 # v5e hardware constants for the roofline (per chip / per link). The α–β
-# presets in comm/cost.py (link_model) are calibrated against these.
+# presets in comm/cost.py (``link_model("ici"/"dcn")``) are calibrated
+# against ICI_BW / DCN_BW — converted to Gbit/s, with order-of-magnitude
+# setup latencies — so modeled comm seconds in the benchmarks line up with
+# the roofline's hardware model (units: B/s here, Gbit/s in NetworkModel;
+# see docs/cost_model.md for the full units table).
 PEAK_FLOPS_BF16 = 197e12   # FLOP/s
 HBM_BW = 819e9             # B/s
 ICI_BW = 50e9              # B/s per link

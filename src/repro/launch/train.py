@@ -75,6 +75,16 @@ def main(argv=None):
     ap.add_argument("--momentum", type=float, default=0.0)
     ap.add_argument("--reducer", default="dense",
                     help="communication reducer: dense | int8 | int<b> | topk")
+    ap.add_argument("--topology", default="star",
+                    choices=["star", "streaming", "hier"],
+                    help="sync round shape: flat star | per-leaf streaming "
+                         "| two-level hierarchical (pods of clients)")
+    ap.add_argument("--pods", type=int, default=2,
+                    help="n_pods for --topology hier (clients split into "
+                         "contiguous pods; 1 degenerates to the flat round)")
+    ap.add_argument("--inter-reducer", default="int8",
+                    help="inter-pod reducer for --topology hier "
+                         "(the WAN hop): dense | int8 | int<b> | topk")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -83,7 +93,9 @@ def main(argv=None):
     tcfg = TrainConfig(algo=args.algo, eta1=args.eta1, k1=args.k1, T1=args.T1,
                        n_stages=args.stages, iid=not args.non_iid,
                        gamma_inv=args.gamma_inv, momentum=args.momentum,
-                       seed=args.seed, reducer=args.reducer)
+                       seed=args.seed, reducer=args.reducer,
+                       topology=args.topology, n_pods=args.pods,
+                       inter_reducer=args.inter_reducer)
     mesh = make_host_mesh(1, 1)
     C = args.clients
 
@@ -91,7 +103,14 @@ def main(argv=None):
     state = LS.init_state(jax.random.key(args.seed), cfg, C, args.optimizer)
     train_local, sync_step, _ = LS.build_train_steps(
         cfg, mesh, client_axis="data", optimizer=args.optimizer,
-        momentum=args.momentum, reducer=args.reducer)
+        momentum=args.momentum, reducer=args.reducer,
+        streaming=args.topology == "streaming")
+    if args.topology == "hier":
+        # the two-level round: dense intra-pod (args.reducer) + compressed
+        # inter-pod — the driver prices it through engine.Hierarchical
+        sync_step = LS.build_sync_step(args.reducer, hierarchical=True,
+                                       n_pods=args.pods,
+                                       inter_reducer=args.inter_reducer)
 
     uses_center = args.algo in ("stl_nc1", "stl_nc2") and args.gamma_inv > 0
     if uses_center:

@@ -408,7 +408,9 @@ def test_driver_accepts_streaming_topology_and_carries_leaf_ledger():
     drv2 = StagewiseDriver(TrainConfig(algo="local", T1=4, k1=2.0,
                                        n_stages=1), train_step, sync_step)
     assert drv2.streaming
-    # hierarchical configs are still refused (flat sync round contract)
-    with pytest.raises(ValueError, match="flat sync round"):
+    # hierarchical configs run two-level rounds now (PR 5) — but not with
+    # a streaming sync step: composing the per-leaf round with the
+    # inter-pod hop is still an open ROADMAP item
+    with pytest.raises(ValueError, match="inter-pod hop"):
         StagewiseDriver(TrainConfig(algo="local", topology="hier"),
                         train_step, sync_step)
