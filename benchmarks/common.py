@@ -101,17 +101,24 @@ def save_artifact(name: str, payload, directory: str = "artifacts/convergence"):
 
 
 def save_bench(name: str, rows, meta: Optional[Dict] = None,
-               directory: str = "artifacts/bench"):
+               directory: Optional[str] = None):
     """Write a BENCH_<name>.json perf-trajectory artifact.
 
     Schema v1: {"bench", "schema", "meta", "rows"} where each row carries the
     bench's own columns plus (when the run models communication) the
     repro.comm fields ``comm_bytes`` and ``comm_time_s``. benchmarks/report.py
-    renders these into the comm-cost table.
+    renders these into the comm-cost table, and ``repro.obs.diff`` /
+    tools/bench_diff.py compare them against committed baselines.
+
+    Output directory: explicit ``directory`` arg > ``REPRO_BENCH_DIR`` env
+    var > ``artifacts/bench`` — the env var is how a baseline-refresh run
+    writes straight into ``benchmarks/results/<scale>/``.
     """
     import json
     import os
 
+    if directory is None:
+        directory = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench")
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"BENCH_{name}.json")
     with open(path, "w") as f:

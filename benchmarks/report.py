@@ -59,10 +59,14 @@ def comm_table(art_dir="artifacts/bench", pattern="BENCH_*.json"):
                 continue
             cell = " ".join(str(r[k]) for k in ("dataset", "net", "dist",
                                                 "algo") if k in r)
+            # pre-PR-1 artifacts (and clock-only benches) may carry bytes
+            # without modeled seconds — render what is there
+            ct = r.get("comm_time_s")
+            ct_s = "-" if ct is None else f"{float(ct):.2f}s"
             lines.append(
                 f"| {rec['bench']} | {cell} | {r.get('reducer', 'dense')} "
                 f"| {r.get('rounds', '-')} | {_fmt_bytes(r['comm_bytes'])} "
-                f"| {float(r['comm_time_s']):.2f}s |")
+                f"| {ct_s} |")
     return "\n".join(lines)
 
 
@@ -102,15 +106,45 @@ def reducer_sweep_table(art_dir="artifacts/bench", pattern="BENCH_*.json"):
         cell_s = " ".join(v for _, v in cell)
         for red, r in by_red.items():
             bx = float(base["comm_bytes"]) / max(float(r["comm_bytes"]), 1.0)
-            tx = (float(base["comm_time_s"])
-                  / max(float(r["comm_time_s"]), 1e-12))
+            # comm_time_s is optional on either side (older artifacts):
+            # bytes ratios always render, time columns degrade to "-"
+            bt, rt = base.get("comm_time_s"), r.get("comm_time_s")
+            t_s = "-" if rt is None else f"{float(rt):.2f}s"
+            tx_s = ("-" if bt is None or rt is None
+                    else f"{float(bt) / max(float(rt), 1e-12):.1f}x")
             o, ob = _obj(r), _obj(base)
             drift = ("-" if o is None or ob is None or ob == 0.0
                      else f"{abs(o - ob) / abs(ob) * 100:.2f}%")
             lines.append(
                 f"| {bench} | {cell_s} | {red} | {r.get('rounds', '-')} "
                 f"| {_fmt_bytes(float(r['comm_bytes']))} | {bx:.1f}x "
-                f"| {float(r['comm_time_s']):.2f}s | {tx:.1f}x | {drift} |")
+                f"| {t_s} | {tx_s} | {drift} |")
+    return "\n".join(lines)
+
+
+def bench_diff_table(baseline_dir="benchmarks/results/smoke",
+                     current_dir="artifacts/bench", tol=0.05):
+    """Regression view: a fresh run's BENCH artifacts vs committed baselines.
+
+    Uses ``repro.obs.diff`` — rows match by identity columns, monitored
+    numeric columns (modeled bytes/seconds, rounds, modeled wall-clock)
+    compare at relative tolerance ``tol``; scale-mismatched artifacts are
+    skipped. Rendering only — ``tools/bench_diff.py`` is what CI gates on.
+    """
+    from repro.obs.diff import diff_dirs
+
+    dd = diff_dirs(baseline_dir, current_dir)
+    lines = [f"compared: {', '.join(dd.compared) or '(none)'}"]
+    for s in dd.skipped:
+        lines.append(f"skipped: {s}")
+    regs = dd.regressions(tol)
+    imps = dd.improvements(tol)
+    lines.append(f"\n{len(regs)} regression(s), {len(imps)} improvement(s) "
+                 f"at tol={tol:.0%}:")
+    for d in regs:
+        lines.append(f"  REGRESSED  {d.render()}")
+    for d in imps:
+        lines.append(f"  improved   {d.render()}")
     return "\n".join(lines)
 
 
@@ -158,6 +192,9 @@ def main():
     print(comm_table())
     print("\n\n### Reducer sweep — rounds × bytes × modeled time vs dense\n")
     print(reducer_sweep_table())
+    if os.path.isdir("benchmarks/results/smoke"):
+        print("\n\n### Bench diff — fresh artifacts vs committed baselines\n")
+        print(bench_diff_table())
 
 
 if __name__ == "__main__":

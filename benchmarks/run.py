@@ -3,6 +3,7 @@
 # roofline analysis derived from the dry-run artifacts.
 #
 #   PYTHONPATH=src python -m benchmarks.run [--full] [--skip-convergence]
+#                                           [--diff [BASELINE_DIR]]
 from __future__ import annotations
 
 import argparse
@@ -16,6 +17,12 @@ def main() -> None:
                     help="paper-scale budgets (hours); default quick mode")
     ap.add_argument("--skip-convergence", action="store_true",
                     help="only micro-benches + complexity + roofline")
+    ap.add_argument("--diff", nargs="?", const="benchmarks/results/smoke",
+                    default=None, metavar="BASELINE_DIR",
+                    help="after the sweeps, diff the fresh BENCH_*.json "
+                         "artifacts against this baseline directory "
+                         "(repro.obs.diff; exits nonzero on a >5%% "
+                         "regression in any monitored modeled column)")
     args = ap.parse_args()
     quick = not args.full
     t0 = time.time()
@@ -44,6 +51,13 @@ def main() -> None:
         table4_comm_cost.run(quick=quick)
 
     print(f"\n[benchmarks] done in {time.time() - t0:.0f}s")
+
+    if args.diff:
+        from tools.bench_diff import main as bench_diff_main
+
+        rc = bench_diff_main([args.diff, "artifacts/bench"])
+        if rc:
+            raise SystemExit(rc)
 
 
 if __name__ == "__main__":

@@ -99,7 +99,9 @@ def run(quick: bool = True, reducers=("dense",)):
     from benchmarks.common import save_artifact, save_bench
 
     save_artifact("table1_convex", rows)
-    save_bench("table1_convex", rows, meta={"reducers": list(reducers)})
+    save_bench("table1_convex", rows,
+               meta={"reducers": list(reducers),
+                     "scale": "quick" if quick else "full"})
     return rows
 
 

@@ -106,7 +106,9 @@ def run(quick: bool = True, reducers=("dense",)):
     from benchmarks.common import save_artifact, save_bench
 
     save_artifact("table2_nonconvex", rows)
-    save_bench("table2_nonconvex", rows, meta={"reducers": list(reducers)})
+    save_bench("table2_nonconvex", rows,
+               meta={"reducers": list(reducers),
+                     "scale": "quick" if quick else "full"})
     return rows
 
 

@@ -162,7 +162,8 @@ def run(quick: bool = True):
     save_bench("table4_comm_cost", rows,
                meta={"network": {"latency_s": net.latency_s,
                                  "bandwidth_gbps": net.bandwidth_gbps},
-                     "n_clients": n_clients})
+                     "n_clients": n_clients,
+                     "scale": "quick" if quick else "full"})
     return rows
 
 

@@ -29,12 +29,19 @@ streaming hides, so their overlap win is asserted looser (≥ 1.05×) —
 compression and overlap attack the same bytes.
 
     PYTHONPATH=src python -m benchmarks.table5_straggler \\
-        [--smoke|--full] [--streaming]
+        [--smoke|--full] [--streaming] [--trace out.json]
 
 ``--streaming`` runs *only* the {blocking, streaming} axis and
 ``--no-streaming`` only the {sync, async} table (CI's bench-smoke drives
 the two as separate ``--smoke --no-streaming`` / ``--smoke --streaming``
 steps); without flags both tables run.
+
+``--trace out.json`` threads a ``repro.obs.Tracer`` through every runtime
+run and exports the merged span timeline as a Perfetto-loadable Chrome
+trace (open at ui.perfetto.dev). Before writing it, the virtual-clock
+``reduce_leaf`` spans are reconciled bit-exactly (bytes) against the
+streaming runs' ``leaf_ledger`` — the trace is asserted to be the ledger,
+not a parallel approximation of it.
 """
 from __future__ import annotations
 
@@ -116,7 +123,7 @@ def streaming_cfg(reducer: str, schedule: str, slowdown: float) -> TrainConfig:
                        straggler_slowdown=slowdown)
 
 
-def run_streaming(scale: str = "quick"):
+def run_streaming(scale: str = "quick", tracer=None):
     """The {blocking, streaming} axis: per-leaf overlap on a multi-leaf MLP."""
     n_clients = 8
     loss_fn, eval_fn, p0, data = make_mlp_problem(scale, n_clients)
@@ -131,7 +138,8 @@ def run_streaming(scale: str = "quick"):
             for sched in ("blocking", "streaming"):
                 res[sched] = runtime.run(loss_fn, p0, data,
                                          streaming_cfg(red, sched, slow),
-                                         eval_fn, eval_every=16)
+                                         eval_fn, eval_every=16,
+                                         tracer=tracer)
             blk, stm = res["blocking"], res["streaming"]
             speed = blk.wall_clock_s / max(stm.wall_clock_s, 1e-12)
             # streaming is pure clock accounting: same seed ⇒ identical
@@ -179,7 +187,7 @@ def run_streaming(scale: str = "quick"):
     return rows
 
 
-def run(scale: str = "quick"):
+def run(scale: str = "quick", tracer=None):
     n_clients = 8
     loss_fn, eval_fn, p0, data = make_problem(scale, n_clients)
     rows = []
@@ -190,7 +198,7 @@ def run(scale: str = "quick"):
                 for mode in MODES:
                     cfg = algo_cfg(algo, scale, red, mode, slow)
                     res = runtime.run(loss_fn, p0, data, cfg, eval_fn,
-                                      eval_every=16)
+                                      eval_every=16, tracer=tracer)
                     # one comparable work unit: total local steps across
                     # clients (the sync engine counts vmapped cohort slots,
                     # the async engine counts per-client job steps)
@@ -243,12 +251,54 @@ def run(scale: str = "quick"):
     return rows
 
 
+def _parse_trace(argv):
+    for i, a in enumerate(argv):
+        if a == "--trace":
+            if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+                raise SystemExit("--trace needs a path, e.g. --trace out.json")
+            return argv[i + 1]
+        if a.startswith("--trace="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def export_trace(tracer, path: str, streaming_rows):
+    """Write the Chrome trace, after reconciling it against the ledger.
+
+    The virtual-clock ``reduce_leaf`` spans (one per per-leaf upload the
+    event runtime scheduled) must sum — in bytes, bit-exactly — to the
+    streaming runs' ``leaf_ledger`` totals; a trace that disagrees with the
+    comm ledger would be decoration, not observability.
+    """
+    from repro.obs import VIRTUAL, write_chrome_trace, write_jsonl
+
+    span_bytes = sum(int(s.attrs["bytes"]) for s in tracer.spans
+                     if s.name == "reduce_leaf" and s.clock == VIRTUAL)
+    ledger_bytes = sum(int(r["leaf_bytes"]) for r in streaming_rows)
+    assert span_bytes == ledger_bytes, \
+        (f"trace reduce_leaf bytes {span_bytes} != streaming leaf_ledger "
+         f"bytes {ledger_bytes}")
+    write_chrome_trace(tracer, path)
+    write_jsonl(tracer, path + "l")   # out.json -> out.jsonl
+    print(f"\ntrace: {len(tracer.spans)} spans -> {path} "
+          f"(reduce_leaf bytes reconcile with leaf_ledger: {span_bytes} B); "
+          "open at ui.perfetto.dev")
+
+
 if __name__ == "__main__":
     import sys
 
     scale = ("smoke" if "--smoke" in sys.argv
              else "full" if "--full" in sys.argv else "quick")
+    trace_path = _parse_trace(sys.argv)
+    tracer = None
+    if trace_path:
+        from repro.obs import Tracer
+        tracer = Tracer(run_id="table5")
+    streaming_rows = []
     if "--streaming" not in sys.argv:
-        run(scale)
+        run(scale, tracer=tracer)
     if "--no-streaming" not in sys.argv:
-        run_streaming(scale)
+        streaming_rows = run_streaming(scale, tracer=tracer)
+    if tracer is not None:
+        export_trace(tracer, trace_path, streaming_rows)

@@ -126,10 +126,24 @@ def comm_summary_for(cfg, template, n_clients: int, n_rounds: int) -> dict:
 
 def comm_summary(reducer, template, n_clients: int, n_rounds: int,
                  model: NetworkModel | None = None) -> dict:
-    """Full comm-cost report for a finished run."""
+    """Full comm-cost report for a finished run.
+
+    Also publishes the report's totals as ``comm.summary_*`` gauges in the
+    ``repro.obs`` metrics registry (labelled by reducer), so a benchmark's
+    final report lands next to the per-stage counters the engine emits.
+    """
+    from repro.obs import metrics as obs_metrics
+
     model = model or NetworkModel()
     per_round = round_bytes(reducer, template, n_clients, model)
     t_round = round_time(model, per_round)
+    m = obs_metrics.registry()
+    m.gauge("comm.summary_bytes", unit="B",
+            help="total modeled payload bytes of the summarized run").set(
+                int(per_round) * int(n_rounds), reducer=reducer.name)
+    m.gauge("comm.summary_time_s", unit="s",
+            help="total modeled serial α–β seconds of the summarized "
+                 "run").set(t_round * int(n_rounds), reducer=reducer.name)
     return {
         "reducer": reducer.name,
         "rounds": int(n_rounds),

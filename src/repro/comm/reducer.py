@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.quantize import ops as Q
+from repro.obs import metrics as obs_metrics
 from repro.utils.tree import tree_mean_leading
 
 _EPS = 1e-12
@@ -343,11 +344,25 @@ class StalenessWeightedMean(_DeltaReducer):
             payloads.append(p)
             new_res.append((y.reshape(e.shape) - p) if self.error_feedback
                            else jnp.zeros_like(e))
+        # encode runs eagerly once per upload (never inside jit), so this
+        # is a safe per-message metric emission point
+        m = obs_metrics.registry()
+        m.counter("comm.messages", unit="messages",
+                  help="async client uploads encoded").inc(
+                      reducer=self.name)
+        m.counter("comm.message_bytes", unit="B",
+                  help="compressed payload bytes of async uploads").inc(
+                      sum(self.leaf_message_bytes(delta)),
+                      reducer=self.name)
         return treedef.unflatten(payloads), treedef.unflatten(new_res)
 
     def merge(self, server, payload, staleness: float, n_clients: int):
         """Apply one arrived message to the server model."""
         w = self.weight(staleness) / float(n_clients)
+        obs_metrics.registry().histogram(
+            "comm.merge_weight", unit="weight",
+            help="staleness-decayed merge weights w(τ)/N applied").observe(
+                w, reducer=self.name)
         return jax.tree.map(lambda s, p: s + w * p.astype(s.dtype),
                             server, payload)
 

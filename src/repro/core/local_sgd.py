@@ -230,6 +230,31 @@ def _build_two_level_sync_step(intra, n_pods: int, inter_reducer,
     return sync_step
 
 
+def sync_step_tags(sync_step) -> dict:
+    """The comm tags ``build_sync_step`` stamped on a round, read through
+    ``jax.jit`` wrapping (tags survive on ``__wrapped__``).
+
+    Returns ``{"reducer", "streaming", "hierarchical"}`` plus
+    ``{"n_pods", "inter_reducer"}`` for two-level rounds; absent tags come
+    back ``None``/``False``. ``StagewiseDriver`` reads its comm accounting
+    *and* its trace-span attributes from here, so the priced ledger and
+    the exported timeline can't drift from the round the step executes.
+    """
+    def tag(name, default=None):
+        v = getattr(sync_step, name, None)
+        if v is None:
+            v = getattr(getattr(sync_step, "__wrapped__", None), name, None)
+        return default if v is None else v
+
+    tags = {"reducer": tag("reducer"),
+            "streaming": bool(tag("streaming", False)),
+            "hierarchical": bool(tag("hierarchical", False))}
+    if tags["hierarchical"]:
+        tags["n_pods"] = tag("n_pods")
+        tags["inter_reducer"] = tag("inter_reducer")
+    return tags
+
+
 def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
                       optimizer: str = "sgd", momentum: float = 0.0,
                       weight_decay: float = 0.0,

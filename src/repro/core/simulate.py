@@ -32,6 +32,7 @@ from repro.comm import get_reducer
 from repro.configs.base import TrainConfig
 from repro.core.prox import prox_loss
 from repro.engine.engine import Engine, StageStatus
+from repro.obs.trace import CAT_COMM, CAT_COMPUTE
 from repro.utils.tree import tree_broadcast_leading, tree_mean_leading, tree_zeros_like
 
 # fold_in salt deriving the reducer's rng from the round rng without
@@ -300,13 +301,20 @@ class VmapSimulatorBackend:
             n = min(self.chunk_rounds, n_rounds - done_in_stage)
             self.rng, sub = jax.random.split(self.rng)
             masks = self._sample_round_masks(n)
-            if masks is None:
-                carry, vals = chunk_fn(carry, sub, self.client_data, center,
-                                       stage.eta, n)
-            else:
-                carry, vals = chunk_fn(carry, sub, self.client_data, center,
-                                       stage.eta, jnp.asarray(masks), n)
-            vals = list(map(float, vals))
+            # one wall span per jit chunk — the host-visible unit of work
+            # (n fused rounds of k local steps + reduce each)
+            with engine.tracer.span("local_steps", cat=CAT_COMPUTE,
+                                    track="simulator",
+                                    attrs={"s": stage.s, "rounds": n,
+                                           "k": k, "eta": stage.eta}):
+                if masks is None:
+                    carry, vals = chunk_fn(carry, sub, self.client_data,
+                                           center, stage.eta, n)
+                else:
+                    carry, vals = chunk_fn(carry, sub, self.client_data,
+                                           center, stage.eta,
+                                           jnp.asarray(masks), n)
+                vals = list(map(float, vals))
             hit = None
             for j, v in enumerate(vals):
                 rd = self.rounds_done + j + 1
@@ -334,6 +342,10 @@ class VmapSimulatorBackend:
         self.t_global = float(tg)
         # steps-per-round breakdown for event-clock overlays (EventBackend)
         self._last_round_steps = [k] * status.rounds
+        engine.metrics.gauge(
+            "train.stage_objective", unit="objective",
+            help="eval_fn(averaged params) at stage end").set(
+                self.history[-1].value, stage=stage.s)
         return status
 
     # -- divergence-triggered periods (AdaptivePeriod) ----------------------
@@ -388,9 +400,13 @@ class VmapSimulatorBackend:
             if not (last or since_sync >= stage.k
                     or float(div) >= policy.threshold):
                 continue
-            params, mom, self.comm_state, consensus = sync_fn(
-                params, mom, self.comm_state,
-                jax.random.fold_in(sub, _COMM_SALT))
+            with engine.tracer.span("reduce", cat=CAT_COMM,
+                                    track="simulator",
+                                    attrs={"s": stage.s,
+                                           "steps": since_sync}):
+                params, mom, self.comm_state, consensus = sync_fn(
+                    params, mom, self.comm_state,
+                    jax.random.fold_in(sub, _COMM_SALT))
             status.rounds += 1
             self.rounds_done += 1
             self._last_round_steps.append(since_sync)
@@ -406,6 +422,10 @@ class VmapSimulatorBackend:
                 break
         self.params, self.mom = params, mom
         self.t_global = float(t)
+        engine.metrics.gauge(
+            "train.stage_objective", unit="objective",
+            help="eval_fn(averaged params) at stage end").set(
+                self.history[-1].value, stage=stage.s)
         return status
 
     def finish(self, engine: Engine) -> List[Record]:
@@ -415,7 +435,8 @@ class VmapSimulatorBackend:
 def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
         eval_fn: Callable, *, eval_every: int = 1, max_rounds: Optional[int] = None,
         target: Optional[float] = None, lr_alpha: float = 0.0,
-        chunk_rounds: int = 32, reducer=None, topology=None) -> List[Record]:
+        chunk_rounds: int = 32, reducer=None, topology=None,
+        tracer=None) -> List[Record]:
     """Run ``cfg.algo`` and return the (comm-round, objective) trace.
 
     loss_fn(params, batch) -> scalar (per-client minibatch loss).
@@ -428,8 +449,11 @@ def run(loss_fn: Callable, init_params, client_data, cfg: TrainConfig,
     which is bit-exact with the historical dense path.
     ``topology`` — an engine.Topology or spec string ("star" | "hier");
     defaults to ``cfg.topology`` with ``reducer`` on the first hop.
+    ``tracer`` — an ``obs.Tracer`` to record wall/modeled span timelines
+    into (None = disabled, zero overhead).
     """
-    engine = Engine(cfg.algo, cfg, topology=topology, reducer=reducer)
+    engine = Engine(cfg.algo, cfg, topology=topology, reducer=reducer,
+                    tracer=tracer)
     backend = VmapSimulatorBackend(
         loss_fn, init_params, client_data, eval_fn, eval_every=eval_every,
         max_rounds=max_rounds, target=target, lr_alpha=lr_alpha,

@@ -23,9 +23,11 @@ import jax.numpy as jnp
 
 from repro.comm import NetworkModel, get_reducer, link_model
 from repro.configs.base import TrainConfig
+from repro.core.local_sgd import sync_step_tags
 from repro.engine.algorithm import get_algorithm
 from repro.engine.engine import Engine, StageStatus
 from repro.engine.topology import Hierarchical, Star, StreamingStar
+from repro.obs.trace import CAT_COMM, CAT_COMPUTE
 from repro.utils.tree import tree_broadcast_leading, tree_mean_leading
 from repro.utils.logging import get_logger
 
@@ -125,21 +127,28 @@ class DriverBackend:
         losses = []
         status = StageStatus()
         done = 0
+        tracer = engine.tracer
         while done < stage.T:
             burst = min(stage.k, stage.T - done)
-            for _ in range(burst):
-                batch = next(self.it)
-                if drv.uses_center:
-                    ds.state, m = drv.train_step(ds.state, batch, stage.eta,
-                                                 ds.center)
-                else:
-                    ds.state, m = drv.train_step(ds.state, batch, stage.eta)
-                losses.append(float(m["loss"]))
-                done += 1
-                ds.iters_total += 1
-                if self.max_iters and ds.iters_total >= self.max_iters:
-                    break
-            ds.state = drv.sync_step(ds.state)
+            with tracer.span("local_steps", cat=CAT_COMPUTE, track="driver",
+                             attrs={"s": stage.s, "steps": burst,
+                                    "eta": stage.eta}):
+                for _ in range(burst):
+                    batch = next(self.it)
+                    if drv.uses_center:
+                        ds.state, m = drv.train_step(ds.state, batch,
+                                                     stage.eta, ds.center)
+                    else:
+                        ds.state, m = drv.train_step(ds.state, batch,
+                                                     stage.eta)
+                    losses.append(float(m["loss"]))
+                    done += 1
+                    ds.iters_total += 1
+                    if self.max_iters and ds.iters_total >= self.max_iters:
+                        break
+            with tracer.span("reduce", cat=CAT_COMM, track="driver",
+                             attrs=dict(drv.span_attrs, s=stage.s)):
+                ds.state = drv.sync_step(ds.state)
             status.rounds += 1
             ds.rounds_total += 1
             if self.max_iters and ds.iters_total >= self.max_iters:
@@ -150,9 +159,12 @@ class DriverBackend:
                           float(jnp.mean(jnp.asarray(losses))) if losses
                           else float("nan"))
         ds.results.append(res)
-        log.info("stage %d: eta=%.3g k=%d iters=%d rounds=%d loss=%.4f",
-                 res.stage, res.eta, res.k, res.iters, res.rounds,
-                 res.mean_loss)
+        engine.metrics.gauge(
+            "train.stage_objective", unit="loss",
+            help="mean training loss per stage").set(res.mean_loss,
+                                                     stage=res.stage)
+        log.info("stage_done", stage=res.stage, eta=res.eta, k=res.k,
+                 iters=res.iters, rounds=res.rounds, loss=res.mean_loss)
         return status
 
     def finish(self, engine: Engine) -> DriverState:
@@ -193,11 +205,10 @@ class StagewiseDriver:
         # from what the round actually transmits — the driver prices
         # exactly the topology the sync_step executes (flat star,
         # per-leaf streaming star, or the two-level hierarchical round).
+        tags = sync_step_tags(sync_step)
+
         def tag(name, default=None):
-            v = getattr(sync_step, name, None)
-            if v is None:
-                v = getattr(getattr(sync_step, "__wrapped__", None), name,
-                            None)
+            v = tags.get(name)
             return default if v is None else v
 
         if reducer is None:
@@ -284,9 +295,17 @@ class StagewiseDriver:
                 f"simulator (core.simulate.run) or the event runtime "
                 f"(repro.runtime.EventBackend)")
         self.stages = self.algorithm.stages(tcfg)
+        # trace-span attributes of one sync round — derived from the same
+        # tags the ledger prices, so trace and ledger agree by construction
+        self.span_attrs = {"reducer": self.reducer.name,
+                           "streaming": self.streaming,
+                           "hierarchical": self.hierarchical}
+        if self.hierarchical:
+            self.span_attrs.update(n_pods=self.n_pods,
+                                   inter_reducer=self.inter_reducer.name)
 
-    def run(self, state: dict, batches, max_iters: Optional[int] = None
-            ) -> DriverState:
+    def run(self, state: dict, batches, max_iters: Optional[int] = None,
+            tracer=None) -> DriverState:
         ds = DriverState(state=state)
         # a fresh Engine per run: its report is the run's comm ledger.
         # Streaming rounds price identically to Star (same bytes, same
@@ -302,9 +321,10 @@ class StagewiseDriver:
         else:
             topo_cls = StreamingStar if self.streaming else Star
             topology = topo_cls(reducer=self.reducer, network=self.net)
-        engine = Engine(self.algorithm, self.tcfg, topology=topology)
+        engine = Engine(self.algorithm, self.tcfg, topology=topology,
+                        tracer=tracer)
         ds = engine.run(DriverBackend(self, ds, batches, max_iters))
-        log.info("comm: reducer=%s rounds=%d bytes=%.3e modeled_time=%.3fs",
-                 self.reducer.name, ds.rounds_total, ds.comm_bytes_total,
-                 ds.comm_time_s)
+        log.info("comm_summary", reducer=self.reducer.name,
+                 rounds=ds.rounds_total, comm_bytes=ds.comm_bytes_total,
+                 comm_time_s=ds.comm_time_s)
         return ds

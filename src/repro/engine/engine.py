@@ -35,6 +35,11 @@ from typing import Any, List, Optional
 from repro.comm.cost import NetworkModel
 from repro.engine.algorithm import Algorithm, get_algorithm
 from repro.engine.topology import Topology, get_topology
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import CAT_COMM, CAT_CONTROL, MODELED, NULL_TRACER
+from repro.utils.logging import get_logger
+
+log = get_logger("engine")
 
 
 @dataclass
@@ -69,6 +74,8 @@ class EngineReport:
     stages_run: int = 0
     hop_costs: List[Any] = field(default_factory=list)
     leaf_costs: List[Any] = field(default_factory=list)
+    # obs.metrics registry snapshot taken when the run finishes
+    metrics: dict = field(default_factory=dict)
 
 
 def topology_for(cfg, reducer=None, topology=None) -> Topology:
@@ -94,15 +101,19 @@ def topology_for(cfg, reducer=None, topology=None) -> Topology:
 class Engine:
     """Drives one Algorithm over one Topology through one backend."""
 
-    def __init__(self, algorithm, cfg, topology=None, reducer=None):
+    def __init__(self, algorithm, cfg, topology=None, reducer=None,
+                 tracer=None):
         self.algorithm: Algorithm = get_algorithm(algorithm)
         self.cfg = cfg
         self.topology: Topology = topology_for(cfg, reducer=reducer,
                                                topology=topology)
         self.stages = self.algorithm.stages(cfg)
         self.report = EngineReport()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = obs_metrics.registry()
         self._bytes_per_round: Optional[int] = None
         self._time_per_round: Optional[float] = None
+        self._modeled_t = 0.0   # cursor of the modeled α–β span timeline
 
     # -- comm-cost ledger ---------------------------------------------------
 
@@ -141,6 +152,71 @@ class Engine:
         return self.topology.summary(self._template, self._n_clients,
                                      self.report.rounds_total)
 
+    # -- observability ------------------------------------------------------
+
+    def trace_rounds(self, stage, rounds: int):
+        """Emit ``rounds`` modeled-timeline round spans for ``stage``.
+
+        Each round lays its hops sequentially on the ledger's serial α–β
+        timeline (``round`` > ``reduce[hop]`` > ``reduce_leaf[leaf]`` >
+        ``broadcast`` marker), so summing the ``bytes`` attributes of all
+        ``reduce_leaf`` spans reconciles bit-exactly with
+        ``Engine.leaf_ledger()`` — both are ``rounds × LeafCost.bytes``.
+        """
+        tracer = self.tracer
+        if not tracer or rounds <= 0:
+            return
+        leaf_by_hop: dict = {}
+        for lc in self.report.leaf_costs:
+            leaf_by_hop.setdefault(lc.hop, []).append(lc)
+        for r in range(rounds):
+            t = self._modeled_t
+            rid = tracer.begin("round", t, cat=CAT_CONTROL, track="round",
+                               clock=MODELED,
+                               attrs={"s": stage.s, "eta": stage.eta,
+                                      "k": stage.k})
+            hop_t = t
+            for hop in self.report.hop_costs:
+                hid = tracer.begin(
+                    "reduce", hop_t, cat=CAT_COMM, track=f"hop/{hop.hop}",
+                    clock=MODELED,
+                    attrs={"hop": hop.hop, "reducer": hop.reducer,
+                           "bytes": hop.bytes, "time_s": hop.time_s})
+                leaf_t = hop_t
+                for lc in leaf_by_hop.get(hop.hop, ()):
+                    tracer.add(
+                        "reduce_leaf", leaf_t, leaf_t + lc.time_s,
+                        cat=CAT_COMM, track=f"leaf/{lc.leaf}", clock=MODELED,
+                        attrs={"leaf": lc.leaf, "path": lc.path,
+                               "hop": lc.hop, "bytes": lc.bytes,
+                               "time_s": lc.time_s})
+                    leaf_t += lc.time_s
+                hop_t += hop.time_s
+                tracer.end(hid, hop_t)
+            tracer.instant("broadcast", hop_t, cat=CAT_COMM, track="round",
+                           clock=MODELED, attrs={"s": stage.s})
+            tracer.end(rid, hop_t)
+            self._modeled_t = hop_t
+
+    def _count_stage(self, stage, status):
+        """Report one stage's ledger into the obs.metrics registry."""
+        m = self.metrics
+        m.counter("engine.rounds", unit="rounds",
+                  help="communication rounds executed").inc(status.rounds)
+        m.counter("engine.iters", unit="iterations",
+                  help="local iterations consumed").inc(status.iters)
+        m.counter("engine.stages", unit="stages",
+                  help="stages executed").inc()
+        cb = m.counter("comm.bytes", unit="B",
+                       help="modeled payload bytes by hop/reducer")
+        ct = m.counter("comm.time_s", unit="s",
+                       help="modeled serial α–β link seconds by hop/reducer")
+        for hop in self.report.hop_costs:
+            cb.inc(status.rounds * hop.bytes, hop=hop.hop,
+                   reducer=hop.reducer)
+            ct.inc(status.rounds * hop.time_s, hop=hop.hop,
+                   reducer=hop.reducer)
+
     # -- run loop -----------------------------------------------------------
 
     def run(self, backend):
@@ -151,13 +227,28 @@ class Engine:
         if self._bytes_per_round is None:
             raise RuntimeError(
                 "backend.setup() must call engine.set_cost_basis()")
-        for stage in self.stages:
-            status = backend.run_stage(stage, self)
-            self.report.stages_run += 1
-            self.report.rounds_total += status.rounds
-            self.report.iters_total += status.iters
-            self.report.comm_bytes_total += status.rounds * self._bytes_per_round
-            self.report.comm_time_s += status.rounds * self._time_per_round
-            if status.stop:
-                break
+        run_attrs = {"algorithm": self.algorithm.name,
+                     "topology": type(self.topology).__name__,
+                     "backend": type(backend).__name__}
+        with self.tracer.span("run", attrs=run_attrs):
+            for stage in self.stages:
+                with self.tracer.span(
+                        "stage", attrs={"s": stage.s, "eta": stage.eta,
+                                        "T": stage.T, "k": stage.k}) as sp:
+                    status = backend.run_stage(stage, self)
+                    sp.set(rounds=status.rounds, iters=status.iters)
+                if self.tracer:
+                    self.trace_rounds(stage, status.rounds)
+                self.report.stages_run += 1
+                self.report.rounds_total += status.rounds
+                self.report.iters_total += status.iters
+                self.report.comm_bytes_total += status.rounds * self._bytes_per_round
+                self.report.comm_time_s += status.rounds * self._time_per_round
+                self._count_stage(stage, status)
+                log.debug("stage_done", s=stage.s, eta=stage.eta,
+                          k=stage.k, rounds=status.rounds,
+                          iters=status.iters, stop=status.stop)
+                if status.stop:
+                    break
+            self.report.metrics = self.metrics.snapshot()
         return backend.finish(self)

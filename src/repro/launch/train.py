@@ -86,6 +86,10 @@ def main(argv=None):
                     help="inter-pod reducer for --topology hier "
                          "(the WAN hop): dense | int8 | int<b> | topk")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export a Perfetto-loadable Chrome trace of the "
+                         "run's span timeline to this path (plus a .jsonl "
+                         "span log next to it)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -138,14 +142,24 @@ def main(argv=None):
     driver = StagewiseDriver(tcfg, train_fn, sync_fn, uses_center=uses_center)
     batches = synthetic_batches(cfg, C, args.batch, args.seq, args.seed,
                                 args.non_iid)
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        from repro.utils.logging import RUN_ID
+        tracer = Tracer(run_id=RUN_ID)
     t0 = time.time()
-    ds = driver.run(state, batches, max_iters=args.steps)
+    ds = driver.run(state, batches, max_iters=args.steps, tracer=tracer)
     dt = time.time() - t0
     log.info("done: %d iters, %d comm rounds, %.1fs (%.1f it/s)",
              ds.iters_total, ds.rounds_total, dt, ds.iters_total / max(dt, 1e-9))
     for r in ds.results:
         log.info("  stage %d: k=%d rounds=%d loss=%.4f", r.stage, r.k,
                  r.rounds, r.mean_loss)
+    if tracer is not None:
+        from repro.obs import write_chrome_trace, write_jsonl
+        write_chrome_trace(tracer, args.trace)
+        write_jsonl(tracer, args.trace + "l")   # foo.json -> foo.jsonl
+        log.info("trace_written", path=args.trace, spans=len(tracer.spans))
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, ds.iters_total, ds.state["params"],
                         {"algo": args.algo, "rounds": ds.rounds_total})

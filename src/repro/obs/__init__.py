@@ -1,0 +1,68 @@
+"""repro.obs — observability for the engine stack.
+
+The cross-cutting layer that turns every run into trace data:
+
+  * ``obs.trace`` — nested spans (``stage`` > ``round`` > ``reduce[hop]``
+    > ``reduce_leaf[leaf]``, plus ``local_steps`` / ``broadcast`` /
+    ``merge``) on three clock domains: measured wall time, the event
+    runtime's virtual clock, and the engine ledger's modeled α–β
+    timeline. Zero overhead when disabled (``NULL_TRACER`` is falsy).
+  * ``obs.metrics`` — process-local counters/gauges/histograms all three
+    backends and the comm reducers report into; snapshotted into
+    ``EngineReport.metrics``.
+  * ``obs.export`` — JSONL span logs and Chrome-trace/Perfetto JSON
+    (one track per client/pod/leaf, spans colored by phase) that
+    https://ui.perfetto.dev opens directly.
+  * ``obs.diff`` — schema-validated BENCH_*.json loading and numeric
+    regression diffing (``tools/bench_diff.py``, CI).
+
+See docs/observability.md for the span taxonomy, metric/unit tables and
+the Perfetto walkthrough.
+"""
+from repro.obs.diff import (
+    BenchSchemaError,
+    Delta,
+    DIFF_KEYS,
+    DirDiff,
+    diff_benches,
+    diff_dirs,
+    load_bench,
+    row_key,
+    validate_bench,
+)
+from repro.obs.export import (
+    span_record,
+    to_chrome_trace,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    registry,
+    reset,
+)
+from repro.obs.trace import (
+    CAT_COMM,
+    CAT_COMPUTE,
+    CAT_CONTROL,
+    CAT_MERGE,
+    MODELED,
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    Tracer,
+    VIRTUAL,
+    WALL,
+)
+
+__all__ = [
+    "BenchSchemaError", "Delta", "DIFF_KEYS", "DirDiff", "diff_benches",
+    "diff_dirs", "load_bench", "row_key", "validate_bench",
+    "span_record", "to_chrome_trace", "write_chrome_trace", "write_jsonl",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "registry", "reset",
+    "CAT_COMM", "CAT_COMPUTE", "CAT_CONTROL", "CAT_MERGE", "MODELED",
+    "NULL_TRACER", "NullTracer", "Span", "Tracer", "VIRTUAL", "WALL",
+]

@@ -1,0 +1,162 @@
+"""Process-local metrics registry — the aggregate half of ``repro.obs``.
+
+Counters (monotone sums), gauges (last-write-wins) and histograms
+(count/sum/min/max summaries), each keyed by a metric name plus optional
+labels. All three execution backends, the engine ledger and the
+``comm.Reducer`` implementations report into one process-local default
+registry; ``Engine.run`` snapshots it into ``EngineReport.metrics`` when
+a run finishes.
+
+Metric names use dotted namespaces (``engine.rounds``,
+``comm.bytes``, ``runtime.merge_staleness``); units ride on the metric
+object and in the snapshot so reports stay self-describing — see the
+metric table in docs/observability.md.
+
+This is deliberately not a Prometheus client: no locks (JAX host code is
+single-threaded per process), no export protocol — ``snapshot()`` returns
+plain dicts that serialize into BENCH/report artifacts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: dict) -> LabelKey:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _label_str(key: LabelKey) -> str:
+    return ",".join(f"{k}={v}" for k, v in key) if key else ""
+
+
+@dataclass
+class Metric:
+    """Base: one named family of labelled series."""
+
+    name: str
+    unit: str = ""
+    help: str = ""
+    kind: str = "metric"
+    values: Dict[LabelKey, float] = field(default_factory=dict)
+
+    def snapshot(self) -> dict:
+        return {"kind": self.kind, "unit": self.unit, "help": self.help,
+                "values": {_label_str(k): v for k, v in
+                           sorted(self.values.items())}}
+
+
+@dataclass
+class Counter(Metric):
+    """Monotone sum (events, bytes, rounds)."""
+
+    kind: str = "counter"
+
+    def inc(self, value: float = 1.0, **labels):
+        k = _label_key(labels)
+        self.values[k] = self.values.get(k, 0.0) + value
+
+    def value(self, **labels) -> float:
+        return self.values.get(_label_key(labels), 0.0)
+
+
+@dataclass
+class Gauge(Metric):
+    """Last-write-wins sample (per-stage objective, queue depth)."""
+
+    kind: str = "gauge"
+
+    def set(self, value: float, **labels):
+        self.values[_label_key(labels)] = float(value)
+
+    def value(self, **labels) -> Optional[float]:
+        return self.values.get(_label_key(labels))
+
+
+@dataclass
+class Histogram(Metric):
+    """count/sum/min/max summary per label set (staleness, round times)."""
+
+    kind: str = "histogram"
+    stats: Dict[LabelKey, dict] = field(default_factory=dict)
+
+    def observe(self, value: float, **labels):
+        v = float(value)
+        st = self.stats.setdefault(_label_key(labels),
+                                   {"count": 0, "sum": 0.0,
+                                    "min": v, "max": v})
+        st["count"] += 1
+        st["sum"] += v
+        st["min"] = min(st["min"], v)
+        st["max"] = max(st["max"], v)
+
+    def summary(self, **labels) -> Optional[dict]:
+        st = self.stats.get(_label_key(labels))
+        if st is None:
+            return None
+        out = dict(st)
+        out["mean"] = st["sum"] / st["count"] if st["count"] else 0.0
+        return out
+
+    def snapshot(self) -> dict:
+        return {"kind": self.kind, "unit": self.unit, "help": self.help,
+                "values": {_label_str(k): dict(v, mean=v["sum"] / v["count"])
+                           for k, v in sorted(self.stats.items())}}
+
+
+class MetricsRegistry:
+    """Name → Metric map with idempotent, kind-checked registration."""
+
+    def __init__(self):
+        self._metrics: Dict[str, Metric] = {}
+
+    def _get(self, cls, name: str, unit: str, help: str) -> Metric:
+        m = self._metrics.get(name)
+        if m is None:
+            m = cls(name=name, unit=unit, help=help)
+            self._metrics[name] = m
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as {m.kind}, "
+                f"requested {cls.__name__.lower()}")
+        return m
+
+    def counter(self, name: str, unit: str = "", help: str = "") -> Counter:
+        return self._get(Counter, name, unit, help)
+
+    def gauge(self, name: str, unit: str = "", help: str = "") -> Gauge:
+        return self._get(Gauge, name, unit, help)
+
+    def histogram(self, name: str, unit: str = "",
+                  help: str = "") -> Histogram:
+        return self._get(Histogram, name, unit, help)
+
+    def snapshot(self) -> dict:
+        """Serializable view of every registered series, sorted by name."""
+        return {name: m.snapshot()
+                for name, m in sorted(self._metrics.items())}
+
+    def reset(self):
+        """Drop all series (tests / run isolation)."""
+        self._metrics.clear()
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def __getitem__(self, name: str) -> Metric:
+        return self._metrics[name]
+
+
+_DEFAULT = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    """The process-local default registry everything reports into."""
+    return _DEFAULT
+
+
+def reset():
+    """Reset the default registry (run/test isolation)."""
+    _DEFAULT.reset()

@@ -28,6 +28,14 @@ class Event:
     client: int = field(compare=False, default=-1)
     info: tuple = field(compare=False, default=())
 
+    @property
+    def leaf(self) -> Optional[int]:
+        """Leaf index of a streaming ``leaf_arrival`` (None otherwise) —
+        what attributes the event to a ``reduce_leaf`` span in
+        ``repro.obs`` traces."""
+        return self.info[0] if self.kind == "leaf_arrival" and self.info \
+            else None
+
 
 class EventQueue:
     """Min-heap of Events with deterministic FIFO tie-breaking."""

@@ -59,10 +59,14 @@ from repro.core.simulate import (
 from repro.engine.algorithm import get_algorithm, make_async
 from repro.engine.engine import Engine, StageStatus
 from repro.engine.topology import Star
+from repro.obs.trace import CAT_COMM, CAT_COMPUTE, CAT_CONTROL, CAT_MERGE, VIRTUAL
 from repro.runtime.client import Heterogeneity, sample_clients
 from repro.runtime.clock import Clock, EventQueue, TraceEntry
 from repro.runtime.schedule import UploadSchedule, get_schedule
+from repro.utils.logging import get_logger
 from repro.utils.tree import tree_broadcast_leading, tree_mean_leading
+
+log = get_logger("runtime")
 
 # numpy stream salt for the dropout draws (separate from the client sampler)
 _DROPOUT_SEED_SALT = 0x0D0D
@@ -134,6 +138,9 @@ class EventBackend(VmapSimulatorBackend):
                            bandwidth_gbps=cfg.comm_bandwidth_gbps)
         self.clients = sample_clients(self.N, self.hetero, net)
         self.clock = Clock()
+        # runtime log records carry the virtual timestamp alongside the
+        # host's monotonic one
+        log.bind_clock(self.clock)
         self.queue = EventQueue()
         self.trace: List[TraceEntry] = []
         self.timeline: List[Tuple[float, int, float]] = [
@@ -142,6 +149,8 @@ class EventBackend(VmapSimulatorBackend):
             (self.hetero.seed + _DROPOUT_SEED_SALT) % (2 ** 31))
         self._round_times: List[float] = []
         self._stage_masks: List[np.ndarray] = []
+        self._tracer = engine.tracer
+        self._metrics = engine.metrics
         self.asynchronous = bool(
             getattr(engine.algorithm.sync_policy, "asynchronous", False))
 
@@ -234,6 +243,34 @@ class EventBackend(VmapSimulatorBackend):
                     (self._round_times[rec.round - 1], rec.round, rec.value))
         return status
 
+    def _trace_client_round(self, tracer, c, start: float, kk: int,
+                            events, active: bool):
+        """Virtual-clock spans for one client's replayed barrier round:
+        ``local_steps`` [round start, compute_done], then either one
+        ``reduce`` upload span (blocking — the α–β transfer window) or one
+        ``reduce_leaf`` serialization span per streamed leaf (the β window
+        only; the stream's α is paid once at open and shows as the gap
+        before the first leaf)."""
+        track = f"client/{c.cid}"
+        for t, kind, info in events:
+            if kind == "compute_done":
+                tracer.add("local_steps", start, t, cat=CAT_COMPUTE,
+                           track=track, clock=VIRTUAL,
+                           attrs={"steps": kk, "straggler": c.straggler})
+            elif kind == "arrival":
+                total = sum(self._leaf_bytes)
+                tracer.add("reduce", t - c.upload_time(total), t,
+                           cat=CAT_COMM, track=track, clock=VIRTUAL,
+                           attrs={"bytes": total, "active": active})
+            elif kind == "leaf_arrival":
+                leaf = info[0]
+                ser = self._leaf_bytes[leaf] / c.network.bandwidth_Bps
+                tracer.add("reduce_leaf", t - ser, t, cat=CAT_COMM,
+                           track=track, clock=VIRTUAL,
+                           attrs={"leaf": leaf,
+                                  "bytes": self._leaf_bytes[leaf],
+                                  "active": active})
+
     def _replay_rounds(self, round_steps: List[int], masks: List[np.ndarray]):
         """Advance the event clock over the executed barrier rounds.
 
@@ -244,15 +281,32 @@ class EventBackend(VmapSimulatorBackend):
         window but still answers the barrier with its zero-delta message,
         so it schedules upload-only arrivals.
         """
+        tracer = self._tracer
+        dropouts = self._metrics.counter(
+            "runtime.dropout_events", unit="events",
+            help="uploads lost / rounds missed to dropout")
         for kk, mask in zip(round_steps, masks):
             start = self.clock.now
+            rid = tracer.begin(
+                "round", start, cat=CAT_CONTROL, track="server",
+                clock=VIRTUAL,
+                attrs={"k": kk, "schedule": self.schedule.name}) \
+                if tracer else None
             for c in self.clients:
                 active = bool(mask[c.cid])
                 if not active:
                     self.trace.append((start, "dropout", c.cid))
+                    dropouts.inc(mode="sync")
+                    if tracer:
+                        tracer.instant("dropout", start, cat=CAT_CONTROL,
+                                       track=f"client/{c.cid}",
+                                       clock=VIRTUAL)
                 events, _ = self.schedule.round_events(
                     c, start, kk, self._leaf_bytes, self._leaf_fracs,
                     active=active)
+                if tracer:
+                    self._trace_client_round(tracer, c, start, kk, events,
+                                             active)
                 for t, kind, info in events:
                     self.queue.push(t, kind, c.cid, info)
             merge_t = start
@@ -267,6 +321,10 @@ class EventBackend(VmapSimulatorBackend):
             self.clock.advance(merge_t)
             self.trace.append((merge_t, "merge", -1))
             self._round_times.append(merge_t)
+            if tracer:
+                tracer.instant("broadcast", merge_t, cat=CAT_COMM,
+                               track="server", clock=VIRTUAL)
+                tracer.end(rid, merge_t)
 
     def _sample_round_masks(self, n: int):
         """Dropout masks for the parent's next n rounds (None = no dropout).
@@ -345,6 +403,13 @@ class EventBackend(VmapSimulatorBackend):
         red = self.merge_reducer
         status = StageStatus()
         hist_mark = len(self.history)
+        tracer = self._tracer
+        dropouts = self._metrics.counter(
+            "runtime.dropout_events", unit="events",
+            help="uploads lost / rounds missed to dropout")
+        staleness_hist = self._metrics.histogram(
+            "runtime.merge_staleness", unit="server cycles (normalized)",
+            help="staleness weight input of async merges")
         # stage-start barrier: everyone pulls the current server model
         for i in range(self.N):
             self._c_params[i] = self.server
@@ -381,6 +446,12 @@ class EventBackend(VmapSimulatorBackend):
             c = self.clients[cid]
             if ev.kind == "compute_done":
                 kk, sub, v_pull, ref = inflight.pop(cid)
+                if tracer:
+                    tracer.add("local_steps", now - c.compute_time(kk), now,
+                               cat=CAT_COMPUTE, track=f"client/{cid}",
+                               clock=VIRTUAL,
+                               attrs={"steps": kk,
+                                      "straggler": c.straggler})
                 job = self._job_fn(engine, kk, self.batch)
                 pre_mom, pre_t = self._c_mom[cid], self._c_t[cid]
                 self._c_params[cid], self._c_mom[cid], self._c_t[cid] = job(
@@ -395,6 +466,10 @@ class EventBackend(VmapSimulatorBackend):
                     # to their pre-job values (the steps count as wasted
                     # compute in the ledger, not as optimizer progress)
                     self.trace.append((now, "drop", cid))
+                    dropouts.inc(mode="async")
+                    if tracer:
+                        tracer.instant("drop", now, cat=CAT_CONTROL,
+                                       track=f"client/{cid}", clock=VIRTUAL)
                     self._c_params[cid] = self.server
                     self._c_mom[cid], self._c_t[cid] = pre_mom, pre_t
                     dispatch(cid)
@@ -414,6 +489,18 @@ class EventBackend(VmapSimulatorBackend):
                 # N-1 clients' merges once is keeping pace, not staleness
                 staleness = max(
                     0, self.server_version - v_pull - (self.N - 1)) / self.N
+                if tracer:
+                    tracer.add("reduce",
+                               now - c.upload_time(self._msg_bytes), now,
+                               cat=CAT_COMM, track=f"client/{cid}",
+                               clock=VIRTUAL,
+                               attrs={"bytes": self._msg_bytes})
+                    tracer.instant("merge", now, cat=CAT_MERGE,
+                                   track="server", clock=VIRTUAL,
+                                   attrs={"client": cid,
+                                          "staleness": staleness})
+                staleness_hist.observe(staleness,
+                                       reducer=red.name)
                 self.server = red.merge(self.server, payload, staleness,
                                         self.N)
                 self.server_version += 1
@@ -479,7 +566,7 @@ def run(loss_fn, init_params, client_data, cfg: TrainConfig, eval_fn, *,
         target: Optional[float] = None, lr_alpha: float = 0.0,
         chunk_rounds: int = 32, reducer=None, topology=None,
         hetero: Optional[Heterogeneity] = None,
-        schedule=None) -> RuntimeResult:
+        schedule=None, tracer=None) -> RuntimeResult:
     """Run ``cfg.algo`` on the event runtime; the ``simulate.run`` of clocks.
 
     Same problem signature as ``core.simulate.run``. ``cfg.async_mode``
@@ -510,15 +597,22 @@ def run(loss_fn, init_params, client_data, cfg: TrainConfig, eval_fn, *,
         net = NetworkModel(latency_s=cfg.comm_latency_s,
                            bandwidth_gbps=cfg.comm_bandwidth_gbps)
         engine = Engine(algo, cfg, topology=Star(reducer=merge_red,
-                                                 network=net))
+                                                 network=net),
+                        tracer=tracer)
     else:
-        engine = Engine(algo, cfg, topology=topology, reducer=reducer)
+        engine = Engine(algo, cfg, topology=topology, reducer=reducer,
+                        tracer=tracer)
     backend = EventBackend(loss_fn, init_params, client_data, eval_fn,
                            hetero=hetero, schedule=schedule,
                            eval_every=eval_every,
                            max_rounds=max_rounds, target=target,
                            lr_alpha=lr_alpha, chunk_rounds=chunk_rounds)
     history = engine.run(backend)
+    log.debug("runtime_done", wall_clock_s=backend.clock.now,
+              rounds=engine.report.rounds_total,
+              iters=engine.report.iters_total,
+              comm_bytes=engine.report.comm_bytes_total,
+              asynchronous=backend.asynchronous)
     final = (backend.server if backend.asynchronous
              else tree_mean_leading(backend.params))
     return RuntimeResult(

@@ -1,18 +1,120 @@
-"""Minimal structured logger (stdout, no deps)."""
+"""Structured JSONL logging (stdout, no deps).
+
+Every log record is one JSON line:
+
+    {"ts": <unix seconds>, "mono_s": <time.monotonic()>, "level": "info",
+     "logger": "stl_sgd", "run_id": "a1b2c3d4", "event": "stage_done",
+     ...fields}
+
+plus ``"virtual_time_s"`` when the logger is bound to a virtual clock
+(``bind_clock`` — the event runtime's ``runtime.clock.Clock``), so
+progress lines from a discrete-event run carry both the host's monotonic
+timestamp and the run's modeled time.
+
+``repro.obs`` and the engine stack report progress through this logger
+(``Engine.run`` / ``StagewiseDriver`` stage events); the legacy printf
+style (``log.info("stage %d", s)``) still works — the formatted text
+lands in the ``msg`` field — so call sites migrate incrementally.
+
+Level filtering: ``REPRO_LOG_LEVEL`` env var (debug|info|warning|error,
+default info). ``quiet()`` silences a logger for tests.
+"""
 from __future__ import annotations
 
-import logging
+import json
+import os
 import sys
+import time
+import uuid
+from typing import Any, Dict, Optional
 
-_FMT = "%(asctime)s %(levelname).1s %(name)s] %(message)s"
+_LEVELS = {"debug": 10, "info": 20, "warning": 30, "error": 40}
+
+# one run id per process: every record of one invocation correlates
+RUN_ID = uuid.uuid4().hex[:8]
 
 
-def get_logger(name: str) -> logging.Logger:
-    logger = logging.getLogger(name)
-    if not logger.handlers:
-        h = logging.StreamHandler(sys.stdout)
-        h.setFormatter(logging.Formatter(_FMT, datefmt="%H:%M:%S"))
-        logger.addHandler(h)
-        logger.setLevel(logging.INFO)
-        logger.propagate = False
-    return logger
+class StructuredLogger:
+    """One named JSONL event stream.
+
+    ``event(level, event, **fields)`` is the primitive; ``debug`` /
+    ``info`` / ``warning`` / ``error`` are sugar. Fields must be
+    JSON-serializable (everything else is stringified).
+    """
+
+    def __init__(self, name: str, stream=None, level: Optional[str] = None,
+                 run_id: Optional[str] = None):
+        self.name = name
+        self.stream = stream if stream is not None else sys.stdout
+        lvl = level or os.environ.get("REPRO_LOG_LEVEL", "info")
+        self.level = _LEVELS.get(lvl.lower(), 20)
+        self.run_id = run_id or RUN_ID
+        self._clock = None
+
+    def bind_clock(self, clock) -> "StructuredLogger":
+        """Attach a virtual-time source: anything with a ``.now`` seconds
+        attribute (``runtime.clock.Clock``) or a 0-arg callable. Records
+        then carry ``virtual_time_s``."""
+        self._clock = clock
+        return self
+
+    def quiet(self) -> "StructuredLogger":
+        """Disable output (tests, library consumers)."""
+        self.level = 10 ** 9
+        return self
+
+    def _virtual_now(self) -> Optional[float]:
+        c = self._clock
+        if c is None:
+            return None
+        now = getattr(c, "now", None)
+        if now is None and callable(c):
+            now = c()
+        return float(now) if now is not None else None
+
+    def event(self, level: str, event: str, *args,
+              **fields: Any) -> Optional[Dict[str, Any]]:
+        """Emit one record. Legacy printf compat: when ``args`` is
+        non-empty, ``event`` is treated as a %-format string and the
+        rendered text becomes the ``msg`` field of a generic ``"log"``
+        event."""
+        if _LEVELS.get(level, 20) < self.level:
+            return None
+        if args:
+            fields = dict(fields, msg=event % args)
+            event = "log"
+        rec: Dict[str, Any] = {"ts": round(time.time(), 6),
+                               "mono_s": round(time.monotonic(), 6),
+                               "level": level, "logger": self.name,
+                               "run_id": self.run_id, "event": event}
+        vt = self._virtual_now()
+        if vt is not None:
+            rec["virtual_time_s"] = vt
+        rec.update(fields)
+        self.stream.write(json.dumps(rec, default=str) + "\n")
+        flush = getattr(self.stream, "flush", None)
+        if flush:
+            flush()
+        return rec
+
+    def debug(self, event: str, *args, **fields):
+        return self.event("debug", event, *args, **fields)
+
+    def info(self, event: str, *args, **fields):
+        return self.event("info", event, *args, **fields)
+
+    def warning(self, event: str, *args, **fields):
+        return self.event("warning", event, *args, **fields)
+
+    def error(self, event: str, *args, **fields):
+        return self.event("error", event, *args, **fields)
+
+
+_loggers: Dict[str, StructuredLogger] = {}
+
+
+def get_logger(name: str) -> StructuredLogger:
+    """Process-cached structured logger (one per name)."""
+    if name not in _loggers:
+        _loggers[name] = StructuredLogger(name)
+    return _loggers[name]
