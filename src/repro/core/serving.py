@@ -46,11 +46,19 @@ def serve_shardings(cfg: ArchConfig, mesh, params_shape, cache_shape,
     return to_sh(pspecs), to_sh(cspecs), tok_sh
 
 
-def greedy_decode(params, cfg: ArchConfig, prompt, n_steps: int, max_len: int):
-    """Simple reference decode loop (examples / tests)."""
+def greedy_decode(params, cfg: ArchConfig, prompt, n_steps: int, max_len: int,
+                  frontend=None):
+    """Simple reference decode loop (examples / tests).
+
+    The per-request ground truth the continuous-batching engine
+    (``repro.serve``) is pinned bit-exact against. ``max_len`` sizes the KV
+    cache and must cover prompt + generation (+ ``cfg.n_frontend_tokens``
+    when ``frontend`` embeddings are passed — frontend archs prepend their
+    patch/frame tokens, which occupy cache slots like text tokens).
+    """
     B = prompt.shape[0]
     cache = TF.init_cache(cfg, B, max_len)
-    logits, cache = TF.prefill(params, cfg, prompt, cache)
+    logits, cache = TF.prefill(params, cfg, prompt, cache, frontend)
     tok = jnp.argmax(logits[:, -1:], axis=-1)
     out = [tok]
     step = jax.jit(lambda p, t, c: TF.decode_step(p, cfg, t, c))

@@ -1,22 +1,38 @@
-"""Serving launcher: batched prefill + decode with a sharded KV cache.
+"""Serving launcher — continuous batching under open-loop synthetic load.
 
-CPU-scale demo of the decode path the dry-run proves for the production mesh:
+Drives ``repro.serve.ServeEngine``: restore a checkpoint (or init fresh
+params), generate a Poisson/bursty request trace, run the
+continuous-batching decode loop, and print the latency/throughput report
+(modeled roofline numbers next to measured host wall-clock).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --smoke \
-      --batch 4 --prompt-len 64 --gen 32
+Examples:
+  # serve a trained checkpoint (arch comes from checkpoint meta)
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+      --steps 8 --ckpt-out /tmp/ck
+  PYTHONPATH=src python -m repro.launch.serve --ckpt /tmp/ck \
+      --process bursty --rate 500 --requests 32
+
+  # or serve fresh random params by arch name
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
+      --requests 16 --trace /tmp/serve_trace.json
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch
-from repro.core.serving import build_prefill_step, build_serve_step
 from repro.models import transformer as TF
+from repro.obs import write_chrome_trace, write_jsonl
+from repro.obs.metrics import MetricsRegistry
+from repro.serve import (
+    SchedulerConfig,
+    ServeEngine,
+    TrafficConfig,
+    arrival_summary,
+    generate_requests,
+)
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
@@ -24,54 +40,89 @@ log = get_logger("serve")
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--ckpt", metavar="DIR",
+                     help="checkpoint dir from launch/train.py --ckpt-out "
+                          "(arch is read from checkpoint meta)")
+    src.add_argument("--arch", help="serve fresh random params for this arch")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    # traffic
+    ap.add_argument("--process", default="poisson",
+                    choices=["poisson", "bursty"])
+    ap.add_argument("--rate", type=float, default=None, metavar="RPS",
+                    help="offered arrival rate, modeled requests/s "
+                         "(default: 0.7 × modeled capacity)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="mean prompt length (geometric)")
+    ap.add_argument("--gen", type=int, default=8,
+                    help="mean output length (geometric)")
+    ap.add_argument("--burst-factor", type=float, default=8.0)
+    # scheduler
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq-len", type=int, default=128)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--prefills-per-step", type=int, default=1)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export the request/decode span timeline as a "
+                         "Perfetto-loadable Chrome trace (+ .jsonl log)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_arch(args.arch, smoke=args.smoke)
-    params = TF.init_params(jax.random.key(args.seed), cfg)
-    B, P, G = args.batch, args.prompt_len, args.gen
-
-    rng = np.random.RandomState(args.seed)
-    prompt = jnp.asarray(rng.randint(0, cfg.vocab_size, size=(B, P)), jnp.int32)
-    frontend = None
-    if cfg.frontend:
-        frontend = jnp.asarray(
-            rng.randn(B, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
-
-    cache = TF.init_cache(cfg, B, P + G + (cfg.n_frontend_tokens if cfg.frontend else 0))
-    prefill = jax.jit(build_prefill_step(cfg))
-    serve = jax.jit(build_serve_step(cfg))
-
-    t0 = time.time()
-    if cfg.frontend:
-        logits, cache = prefill(params, cache, prompt, frontend)
+    sched = SchedulerConfig(n_slots=args.slots, max_seq_len=args.max_seq_len,
+                            max_queue=args.max_queue,
+                            max_prefills_per_step=args.prefills_per_step)
+    if args.ckpt:
+        engine = ServeEngine.from_checkpoint(args.ckpt, scheduler=sched)
+        cfg = engine.cfg
     else:
-        logits, cache = prefill(params, cache, prompt)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_prefill = time.time() - t0
+        cfg = get_arch(args.arch, smoke=args.smoke)
+        params = TF.init_params(jax.random.key(args.seed), cfg)
+        engine = ServeEngine(cfg, params, scheduler=sched)
 
-    out = [tok]
-    t1 = time.time()
-    for _ in range(G - 1):
-        logits, cache = serve(params, cache, tok)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.time() - t1
+    # default offered load: 70% of the modeled decode capacity, so the
+    # out-of-the-box run sits below the knee of the latency curve
+    capacity = sched.n_slots / engine.decode_step_s
+    rate = args.rate if args.rate is not None else 0.7 * capacity
+    mean_p, mean_g = args.prompt_len, args.gen
+    tcfg = TrafficConfig(
+        process=args.process, rate_rps=rate, n_requests=args.requests,
+        mean_prompt_len=mean_p, max_prompt_len=min(4 * mean_p,
+                                                   args.max_seq_len // 2),
+        mean_out_len=mean_g, max_out_len=min(4 * mean_g,
+                                             args.max_seq_len // 2),
+        burst_factor=args.burst_factor, seed=args.seed)
+    requests = generate_requests(tcfg, cfg.vocab_size)
+    offered = arrival_summary(requests)
+    log.info("arch=%s slots=%d capacity=%.0f tok/s offered=%.0f rps (%s)",
+             cfg.name, sched.n_slots, capacity, offered["rate_rps"],
+             args.process)
 
-    gen = jnp.concatenate(out, axis=1)
-    log.info("arch=%s batch=%d prefill %d tok in %.3fs (%.0f tok/s); "
-             "decode %d steps in %.3fs (%.1f tok/s/seq, %.1f total tok/s)",
-             cfg.name, B, B * P, t_prefill, B * P / max(t_prefill, 1e-9),
-             G, t_dec, (G - 1) / max(t_dec, 1e-9), B * (G - 1) / max(t_dec, 1e-9))
-    log.info("sample generation[0,:16]: %s", np.asarray(gen[0, :16]).tolist())
-    return gen
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        from repro.utils.logging import RUN_ID
+        tracer = Tracer(run_id=RUN_ID)
+    registry = MetricsRegistry()
+    report = engine.run(requests, tracer=tracer, registry=registry)
+
+    n_rej = len(report.rejected)
+    log.info("served %d/%d requests (%d rejected), %d decode steps, "
+             "mean occupancy %.2f/%d",
+             len(report.completed), len(requests), n_rej, report.n_steps,
+             report.mean_occupancy, sched.n_slots)
+    log.info("modeled: makespan %.4fs, decode step %.2eS, %.0f tok/s | "
+             "measured: %.2fs wall, %.0f tok/s",
+             report.makespan_s, report.decode_step_s, report.modeled_tok_s,
+             report.measured_wall_s, report.measured_tok_s)
+    for name, s in report.latency_summary().items():
+        log.info("  %-20s p50=%.2e p95=%.2e p99=%.2e (n=%d)", name,
+                 s["p50"], s["p95"], s["p99"], s["count"])
+    if tracer is not None:
+        write_chrome_trace(tracer, args.trace)
+        write_jsonl(tracer, args.trace + "l")   # foo.json -> foo.jsonl
+        log.info("trace_written", path=args.trace, spans=len(tracer.spans))
+    return report
 
 
 if __name__ == "__main__":

@@ -86,6 +86,11 @@ def main(argv=None):
                     help="inter-pod reducer for --topology hier "
                          "(the WAN hop): dense | int8 | int<b> | topk")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-out", default=None, metavar="DIR",
+                    help="write the final params as a serveable checkpoint: "
+                         "meta records arch/smoke + the full stagewise "
+                         "schedule, so launch/serve.py --ckpt DIR can "
+                         "rebuild the config and restore without flags")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="export a Perfetto-loadable Chrome trace of the "
                          "run's span timeline to this path (plus a .jsonl "
@@ -164,6 +169,25 @@ def main(argv=None):
         save_checkpoint(args.ckpt_dir, ds.iters_total, ds.state["params"],
                         {"algo": args.algo, "rounds": ds.rounds_total})
         log.info("checkpoint written to %s", args.ckpt_dir)
+    if args.ckpt_out:
+        # serveable checkpoint: the consensus params x̄ (client-axis mean —
+        # identical across clients right after a sync round), plus meta
+        # carrying everything ServeEngine.from_checkpoint needs to rebuild
+        # the arch and the stagewise schedule actually executed
+        consensus = jax.tree.map(lambda p: p.mean(axis=0),
+                                 ds.state["params"])
+        meta = {
+            "arch": args.arch, "smoke": bool(args.smoke),
+            "algo": args.algo, "eta1": args.eta1, "k1": args.k1,
+            "T1": args.T1, "n_stages": args.stages,
+            "iters": ds.iters_total, "rounds": ds.rounds_total,
+            "stages": [{"stage": r.stage, "k": r.k, "rounds": r.rounds,
+                        "eta": r.eta, "mean_loss": float(r.mean_loss)}
+                       for r in ds.results],
+        }
+        path = save_checkpoint(args.ckpt_out, ds.iters_total, consensus,
+                               meta)
+        log.info("serveable checkpoint written to %s", path)
     return ds
 
 

@@ -32,10 +32,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 ID_KEYS = ("dataset", "net", "dist", "algo", "mode", "reducer", "schedule",
            "slowdown", "leaves", "arch", "shape", "program", "cell")
 
-# monitored numeric columns: modeled comm bytes/seconds, round counts and
-# the event runtime's modeled wall-clock — higher is worse for all of them
+# monitored numeric columns: modeled comm bytes/seconds, round counts, the
+# event runtime's modeled wall-clock and the serving driver's modeled
+# latency percentiles — higher is worse for all of them
 DIFF_KEYS = ("comm_bytes", "comm_time_s", "rounds", "wall_clock_s",
-             "blocking_s", "streaming_s")
+             "blocking_s", "streaming_s", "p50_s", "p95_s", "p99_s")
 
 
 class BenchSchemaError(ValueError):

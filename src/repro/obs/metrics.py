@@ -19,7 +19,7 @@ plain dicts that serialize into BENCH/report artifacts.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 LabelKey = Tuple[Tuple[str, str], ...]
 
@@ -75,34 +75,75 @@ class Gauge(Metric):
         return self.values.get(_label_key(labels))
 
 
+PERCENTILES = (50.0, 95.0, 99.0)   # the tail summary every histogram carries
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    """q-th percentile of ``xs`` with linear interpolation between closest
+    ranks — numerically identical to ``numpy.percentile(xs, q)`` (the
+    default "linear" method), which the unit tests pin."""
+    ys = sorted(xs)
+    if len(ys) == 1:
+        return ys[0]
+    rank = (q / 100.0) * (len(ys) - 1)
+    lo = int(rank)
+    frac = rank - lo
+    if lo + 1 >= len(ys):
+        return ys[-1]
+    return ys[lo] + frac * (ys[lo + 1] - ys[lo])
+
+
 @dataclass
 class Histogram(Metric):
-    """count/sum/min/max summary per label set (staleness, round times)."""
+    """count/sum/min/max + p50/p95/p99 summary per label set (staleness,
+    round times, request latencies).
+
+    Raw samples are retained per label set so percentiles are exact
+    (numpy-identical linear interpolation), not bucket approximations —
+    the registry is process-local and runs are bounded, so sample memory
+    is O(observations), which the serving latency ledger needs anyway
+    for its p50/p95/p99 columns.
+    """
 
     kind: str = "histogram"
     stats: Dict[LabelKey, dict] = field(default_factory=dict)
+    samples: Dict[LabelKey, List[float]] = field(default_factory=dict)
 
     def observe(self, value: float, **labels):
         v = float(value)
-        st = self.stats.setdefault(_label_key(labels),
-                                   {"count": 0, "sum": 0.0,
-                                    "min": v, "max": v})
+        k = _label_key(labels)
+        st = self.stats.setdefault(k, {"count": 0, "sum": 0.0,
+                                       "min": v, "max": v})
         st["count"] += 1
         st["sum"] += v
         st["min"] = min(st["min"], v)
         st["max"] = max(st["max"], v)
+        self.samples.setdefault(k, []).append(v)
 
-    def summary(self, **labels) -> Optional[dict]:
-        st = self.stats.get(_label_key(labels))
-        if st is None:
-            return None
+    def percentile(self, q: float, **labels) -> Optional[float]:
+        """Exact q-th percentile of everything observed under ``labels``
+        (None when nothing was observed)."""
+        xs = self.samples.get(_label_key(labels))
+        return _percentile(xs, q) if xs else None
+
+    def _full(self, k: LabelKey) -> dict:
+        st = self.stats[k]
         out = dict(st)
         out["mean"] = st["sum"] / st["count"] if st["count"] else 0.0
+        xs = self.samples.get(k)
+        for q in PERCENTILES:
+            out[f"p{q:g}"] = _percentile(xs, q) if xs else None
         return out
+
+    def summary(self, **labels) -> Optional[dict]:
+        k = _label_key(labels)
+        if k not in self.stats:
+            return None
+        return self._full(k)
 
     def snapshot(self) -> dict:
         return {"kind": self.kind, "unit": self.unit, "help": self.help,
-                "values": {_label_str(k): dict(v, mean=v["sum"] / v["count"])
+                "values": {_label_str(k): self._full(k)
                            for k, v in sorted(self.stats.items())}}
 
 

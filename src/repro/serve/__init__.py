@@ -1,0 +1,45 @@
+"""repro.serve — continuous-batching inference over STL-SGD checkpoints.
+
+The serving half of the repro stack: restore a ``launch/train.py
+--ckpt-out`` checkpoint, put it behind admission control and a fixed
+KV-cache slot pool, and drive it with open-loop synthetic traffic on the
+discrete-event virtual clock. Layers:
+
+  * ``traffic``   — Poisson / bursty (MMPP) arrival processes, sampled
+    prompt/output lengths; pure function of seed.
+  * ``scheduler`` — bounded-queue FCFS admission control, token budget,
+    prefill/decode interleaving cap, lowest-index slot allocation.
+  * ``engine``    — ``ServeEngine``: jitted prefill + vmapped decode with
+    donated cache buffers; requests join/retire at step boundaries
+    without draining the batch. Bit-exact per slot with
+    ``core.serving.greedy_decode``.
+  * ``ledger``    — per-request latency records (queue wait, TTFT, TPOT,
+    e2e) surfaced as ``request > {queue, prefill, decode}`` spans and
+    ``serve.*`` metrics with p50/p95/p99 summaries.
+
+See docs/serving.md for the request lifecycle and the latency taxonomy;
+``benchmarks/table6_serving.py`` sweeps offered load → throughput/latency.
+"""
+from repro.serve.engine import DeviceModel, ServeEngine, ServeReport
+from repro.serve.ledger import RequestRecord, emit_spans, publish_metrics
+from repro.serve.scheduler import (
+    Admission,
+    Scheduler,
+    SchedulerConfig,
+    SlotPool,
+)
+from repro.serve.traffic import (
+    Request,
+    TrafficConfig,
+    arrival_summary,
+    generate_requests,
+    offered_load,
+)
+
+__all__ = [
+    "DeviceModel", "ServeEngine", "ServeReport",
+    "RequestRecord", "emit_spans", "publish_metrics",
+    "Admission", "Scheduler", "SchedulerConfig", "SlotPool",
+    "Request", "TrafficConfig", "arrival_summary", "generate_requests",
+    "offered_load",
+]

@@ -1,0 +1,367 @@
+"""Continuous-batching inference engine over a fixed KV-cache slot pool.
+
+``ServeEngine`` closes the train → checkpoint → serve loop: it restores
+params via ``checkpoint/ckpt.py`` (``from_checkpoint``), builds jitted
+prefill/decode steps from ``core/serving.py``, and runs an event-driven
+decode loop in which requests join free slots at step boundaries and
+finished sequences retire without draining the batch.
+
+Execution model
+---------------
+The decode batch is always ``n_slots`` wide: one *slot* = one independent
+single-sequence KV cache (batch dim 1) with its own position counter. The
+decode step is ``jit(vmap(decode_step))`` over the slot axis with the
+stacked cache **donated** (palivla's sjit/``donate_argnums`` step
+construction) — the cache is updated in place across steps instead of
+copied. Because each slot's lanes are independent under vmap, a slot's
+token stream is bit-exact with the per-request ``greedy_decode`` reference
+regardless of arrival order and slot assignment — the batching-invariance
+property ``tests/test_serve.py`` pins (tokens *and* raw logits).
+
+Two timelines
+-------------
+Time is *modeled* on the ``runtime.clock`` virtual clock: arrivals come
+from ``traffic.offered_load``, prefills and decode steps advance the clock
+by roofline-priced costs (``launch/flops.py`` compute/HBM terms +
+``comm.NetworkModel`` α–β activation-collective term when the modeled mesh
+has >1 chip). Same traffic seed ⇒ identical event order, latency ledger
+and span tree. Host wall time is measured alongside (never fed back into
+scheduling), so reports show modeled and measured throughput side by side.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint
+from repro.comm.cost import NetworkModel, link_model
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.serving import build_prefill_step, build_serve_step
+from repro.launch.flops import shape_flops
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.models import transformer as TF
+from repro.obs import CAT_COMPUTE, CAT_CONTROL, VIRTUAL
+from repro.obs import metrics as obs_metrics
+from repro.runtime.clock import Clock
+from repro.serve import ledger as serve_ledger
+from repro.serve.ledger import RequestRecord
+from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.traffic import Request, offered_load
+from repro.utils.logging import get_logger
+
+log = get_logger("serve.engine")
+
+
+@dataclass(frozen=True)
+class DeviceModel:
+    """Hardware model pricing one serve step in modeled seconds.
+
+    Roofline: ``max(step_flops / (n_chips × peak), hbm_bytes / (n_chips ×
+    bw))``. With ``n_chips > 1`` the modeled mesh shards the step, and
+    every step additionally pays one α–β activation all-reduce on ``link``
+    (≈ ``2 × tokens × d_model`` bf16 bytes per layer — the ring-collective
+    payload that model-sharded decode cannot hide).
+    Defaults are the v5e constants from ``launch/mesh.py``.
+    """
+
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    n_chips: int = 1
+    link: Optional[NetworkModel] = None    # default: calibrated ICI
+
+    def _link(self) -> NetworkModel:
+        return self.link if self.link is not None else link_model("ici")
+
+    def step_time_s(self, cfg: ArchConfig, shape: ShapeConfig) -> float:
+        fr = shape_flops(cfg, shape)
+        t = max(fr.step_flops / (self.n_chips * self.peak_flops),
+                fr.hbm_bytes / (self.n_chips * self.hbm_bw))
+        if self.n_chips > 1:
+            tokens = shape.global_batch * (1 if shape.mode == "decode"
+                                           else shape.seq_len)
+            coll = 2.0 * tokens * cfg.d_model * 2.0 * cfg.n_layers
+            t += self._link().time(coll)
+        return t
+
+
+@dataclass
+class ServeReport:
+    """Everything one ``ServeEngine.run`` produced.
+
+    ``records`` cover every offered request (completed and rejected, id
+    order); modeled numbers are deterministic per seed, ``measured_*``
+    are host wall-clock and vary run to run.
+    """
+
+    records: List[RequestRecord]
+    n_steps: int                     # executed decode steps
+    n_prefills: int
+    makespan_s: float                # modeled: virtual clock at drain
+    decode_step_s: float             # modeled price of one decode step
+    mean_occupancy: float            # active slots averaged over steps
+    modeled_tok_s: float             # generated tokens / modeled makespan
+    measured_wall_s: float
+    measured_tok_s: float
+    registry: obs_metrics.MetricsRegistry = field(repr=False, default=None)
+
+    @property
+    def completed(self) -> List[RequestRecord]:
+        return [r for r in self.records if r.outcome == "completed"]
+
+    @property
+    def rejected(self) -> List[RequestRecord]:
+        return [r for r in self.records if r.outcome != "completed"]
+
+    def latency_summary(self) -> Dict[str, dict]:
+        """p50/p95/p99 (+count/mean) per latency family, straight from the
+        ``serve.*`` obs histograms this run published."""
+        out = {}
+        for name in ("serve.queue_wait_s", "serve.ttft_s", "serve.tpot_s",
+                     "serve.e2e_s"):
+            if name in self.registry:
+                s = self.registry[name].summary()
+                if s is not None:
+                    out[name] = s
+        return out
+
+    def trace_keys(self) -> list:
+        """Deterministic fingerprint of the whole ledger (determinism
+        tests compare these across same-seed runs)."""
+        return [r.trace_key() for r in self.records]
+
+
+@dataclass
+class _SlotState:
+    """Host-side view of one occupied slot."""
+
+    record: RequestRecord
+    generated: int                   # tokens produced so far (>= 1)
+
+
+class ServeEngine:
+    """Continuous-batching serving driver (see module docstring)."""
+
+    def __init__(self, cfg: ArchConfig, params, *,
+                 scheduler: Optional[SchedulerConfig] = None,
+                 device: Optional[DeviceModel] = None):
+        self.cfg = cfg
+        self.params = params
+        self.sched_cfg = scheduler or SchedulerConfig()
+        self.device = device or DeviceModel()
+        self.max_seq_len = self.sched_cfg.max_seq_len
+        self.n_slots = self.sched_cfg.n_slots
+
+        prefill_step = build_prefill_step(cfg)
+        serve_step = build_serve_step(cfg)
+
+        def _prefill(params, cache, prompt, frontend=None):
+            logits, cache = prefill_step(params, cache, prompt, frontend)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            return tok, cache
+
+        def _decode(params, toks, stacked):
+            def one(tok, cache):
+                logits, cache = serve_step(params, cache, tok)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+            return jax.vmap(one)(toks, stacked)
+
+        def _join(stacked, toks, cache, tok, slot):
+            stacked = jax.tree.map(
+                lambda buf, x: jax.lax.dynamic_update_index_in_dim(
+                    buf, x, slot, 0), stacked, cache)
+            return stacked, jax.lax.dynamic_update_index_in_dim(
+                toks, tok, slot, 0)
+
+        # donated buffers: the stacked cache (and token front) are threaded
+        # through jit in place — zero-copy across decode steps
+        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
+        self._decode = jax.jit(_decode, donate_argnums=(1, 2))
+        self._join = jax.jit(_join, donate_argnums=(0, 1))
+
+        # modeled price of one (always full-width) decode step
+        self.decode_step_s = self.device.step_time_s(
+            cfg, ShapeConfig("serve_decode", self.max_seq_len,
+                             self.n_slots, "decode"))
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_checkpoint(cls, directory: str, step: Optional[int] = None,
+                        **kwargs) -> "ServeEngine":
+        """Restore a ``launch/train.py --ckpt-out`` artifact and serve it.
+
+        The template load needs an arch before it can build shapes, so the
+        restore is two-phase: peek at the npz's ``__meta__`` for the arch
+        name, rebuild the params template from the registry, then do the
+        real shape/dtype-checked load.
+        """
+        import json
+        import os
+
+        from repro.checkpoint.ckpt import latest_step
+
+        s = step if step is not None else latest_step(directory)
+        if s is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+        path = os.path.join(directory, f"step_{s:010d}.npz")
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(bytes(z["__meta__"].tobytes()).decode())
+        if "arch" not in meta:
+            raise ValueError(
+                f"{path}: checkpoint meta has no 'arch' key — was it "
+                "written by launch/train.py --ckpt-out?")
+        cfg = get_arch(meta["arch"], smoke=bool(meta.get("smoke", False)))
+        template = TF.init_params_shape(cfg)
+        params, meta = load_checkpoint(directory, template, step=s)
+        params = jax.tree.map(jnp.asarray, params)
+        log.info("restored %s step=%d (algo=%s rounds=%s)", meta["arch"], s,
+                 meta.get("algo"), meta.get("rounds"))
+        return cls(cfg, params, **kwargs)
+
+    # -- pricing ------------------------------------------------------------
+
+    def prefill_s(self, req: Request) -> float:
+        """Modeled cost of one request's prefill (frontend tokens count)."""
+        fe = self.cfg.n_frontend_tokens if req.frontend is not None else 0
+        return self.device.step_time_s(
+            self.cfg, ShapeConfig("serve_prefill", req.prompt_len + fe, 1,
+                                  "prefill"))
+
+    # -- the loop -----------------------------------------------------------
+
+    def run(self, requests: List[Request], tracer=None,
+            registry: Optional[obs_metrics.MetricsRegistry] = None
+            ) -> ServeReport:
+        """Serve ``requests`` (open loop) until the system drains."""
+        registry = registry or obs_metrics.registry()
+        events = offered_load(requests)
+        by_id = {r.id: r for r in requests}
+        clock = Clock()
+        sched = Scheduler(self.sched_cfg,
+                          n_frontend_tokens=self.cfg.n_frontend_tokens)
+        slots: List[Optional[_SlotState]] = [None] * self.n_slots
+        records: Dict[int, RequestRecord] = {}
+
+        one = TF.init_cache(self.cfg, 1, self.max_seq_len)
+        stacked = jax.tree.map(
+            lambda v: jnp.stack([v] * self.n_slots), one)
+        toks = jnp.zeros((self.n_slots, 1, 1), jnp.int32)
+
+        n_steps = n_prefills = 0
+        occupancy_sum = 0
+        tokens_out = 0
+        run_span = tracer.span("serve_run", track="server", attrs={
+            "n_requests": len(requests), "n_slots": self.n_slots}) \
+            if tracer else None
+        if run_span:
+            run_span.__enter__()
+        t_wall0 = time.monotonic()
+
+        def _offer(req: Request):
+            rec = RequestRecord(id=req.id, prompt_len=req.prompt_len,
+                                n_out=req.n_out, arrival_s=req.arrival_s)
+            records[req.id] = rec
+            if not sched.offer(req):
+                too_long = any(r is req for r in sched.rejected_too_long)
+                rec.outcome = ("rejected_too_long" if too_long
+                               else "rejected_full")
+
+        def _retire(slot: int, t: float):
+            nonlocal tokens_out
+            st = slots[slot]
+            st.record.finish_s = t
+            tokens_out += st.record.n_out
+            sched.release(slot)
+            slots[slot] = None
+
+        while events or not sched.idle:
+            # 1. arrivals due now enter admission control
+            while events and events.peek().time <= clock.now:
+                _offer(by_id[events.pop().client])
+            # 2. idle system: jump to the next arrival
+            if sched.idle:
+                if not events:
+                    break
+                clock.advance(events.peek().time)
+                continue
+            # 3. step boundary: admissions join free slots (serialized
+            #    prefills, capped by the interleaving policy)
+            for adm in sched.admit():
+                req, slot = adm.request, adm.slot
+                rec = records[req.id]
+                rec.slot, rec.admit_s = slot, clock.now
+                fresh = TF.init_cache(self.cfg, 1, self.max_seq_len)
+                prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+                fe = (jnp.asarray(req.frontend[None], jnp.bfloat16)
+                      if req.frontend is not None else None)
+                tok1, cache1 = (self._prefill(self.params, fresh, prompt, fe)
+                                if fe is not None else
+                                self._prefill(self.params, fresh, prompt))
+                stacked, toks = self._join(
+                    stacked, toks, cache1, tok1, slot)
+                n_prefills += 1
+                clock.advance(clock.now + self.prefill_s(req))
+                rec.first_token_s = clock.now
+                rec.tokens.append(int(jax.device_get(tok1)[0, 0]))
+                rec.token_times_s.append(clock.now)
+                slots[slot] = _SlotState(record=rec, generated=1)
+                if rec.n_out == 1:
+                    _retire(slot, clock.now)
+            # 4. one decode step over the full slot pool
+            active = [i for i, st in enumerate(slots) if st is not None]
+            if active:
+                t0 = clock.now
+                toks, stacked = self._decode(self.params, toks, stacked)
+                clock.advance(clock.now + self.decode_step_s)
+                n_steps += 1
+                occupancy_sum += len(active)
+                host_toks = np.asarray(jax.device_get(toks))
+                for i in active:
+                    st = slots[i]
+                    st.generated += 1
+                    st.record.tokens.append(int(host_toks[i, 0, 0]))
+                    st.record.token_times_s.append(clock.now)
+                    if st.generated >= st.record.n_out:
+                        _retire(i, clock.now)
+                if tracer:
+                    tracer.add("decode_step", t0, clock.now,
+                               cat=CAT_COMPUTE, track="server",
+                               clock=VIRTUAL,
+                               attrs={"active": len(active),
+                                      "queued": sched.queue_depth})
+
+        measured_wall_s = time.monotonic() - t_wall0
+        if run_span:
+            run_span.set(n_steps=n_steps, n_prefills=n_prefills)
+            run_span.__exit__(None, None, None)
+
+        recs = [records[r.id] for r in sorted(requests, key=lambda r: r.id)]
+        serve_ledger.emit_spans(tracer, recs)
+        serve_ledger.publish_metrics(registry, recs)
+        makespan = clock.now
+        mean_occ = occupancy_sum / n_steps if n_steps else 0.0
+        g = registry.gauge
+        g("serve.occupancy", unit="slots",
+          help="mean active slots per decode step").set(mean_occ)
+        g("serve.queue_depth", unit="requests",
+          help="waiting requests at drain").set(sched.queue_depth)
+        modeled_tok_s = tokens_out / makespan if makespan > 0 else 0.0
+        g("serve.modeled_tok_s", unit="tokens/s",
+          help="generated tokens over modeled makespan").set(modeled_tok_s)
+        measured_tok_s = (tokens_out / measured_wall_s
+                          if measured_wall_s > 0 else 0.0)
+        g("serve.measured_tok_s", unit="tokens/s",
+          help="generated tokens over host wall time").set(measured_tok_s)
+        return ServeReport(
+            records=recs, n_steps=n_steps, n_prefills=n_prefills,
+            makespan_s=makespan, decode_step_s=self.decode_step_s,
+            mean_occupancy=mean_occ, modeled_tok_s=modeled_tok_s,
+            measured_wall_s=measured_wall_s, measured_tok_s=measured_tok_s,
+            registry=registry)
