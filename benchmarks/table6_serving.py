@@ -18,8 +18,17 @@ function of the traffic seed, scheduler config and roofline pricing,
 independent of host speed and even of the computed logits (retirement
 counts tokens, it never inspects them) — so the committed baseline gates
 bit-stable in CI (``tools/bench_diff.py``: ``wall_clock_s``, ``p50_s``,
-``p95_s``, ``p99_s``). Measured host wall-clock and tok/s ride along in
-non-monitored columns for the modeled-vs-measured comparison.
+``p95_s``, ``p99_s``, ``slo_breach_s``). Measured host wall-clock and
+tok/s ride along in non-monitored columns for the modeled-vs-measured
+comparison.
+
+Each cell additionally runs the sliding-window SLO monitor (``obs.slo``,
+thresholds in decode-step units) over the cell's virtual-clock series:
+``slo_ttb_s`` is the time-to-first-breach (None below the knee —
+higher-is-better, so reported but NOT gated), ``slo_breach_s`` the total
+breached seconds (higher-is-worse, gated), ``saturated`` whether some
+SLO was still breaching when the trace ended — the open-loop saturation
+detector.
 
 Percentiles come from the ``serve.*`` obs histograms (exact, numpy-equal
 linear interpolation — see ``repro.obs.metrics``), not from ad-hoc math in
@@ -30,8 +39,9 @@ this script.
 
 ``--trace`` exports the bursty cell at the highest load as a
 Perfetto-loadable Chrome trace: per-request ``request > {queue, prefill,
-decode}`` lifecycle tracks next to the engine's ``decode_step`` occupancy
-track (open at ui.perfetto.dev).
+decode}`` lifecycle tracks and the SLO breach spans next to the engine's
+``decode_step`` occupancy track, plus counter tracks for queue depth,
+batch occupancy and tokens/s (open at ui.perfetto.dev).
 """
 from __future__ import annotations
 
@@ -41,6 +51,8 @@ from benchmarks.common import print_table, save_artifact, save_bench
 from repro.configs import get_arch
 from repro.models import transformer as TF
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.series import SeriesRegistry
+from repro.obs.slo import SLOMonitor, serve_slo_targets
 from repro.serve import (
     SchedulerConfig,
     ServeEngine,
@@ -52,6 +64,8 @@ ARCH = "qwen3-14b"
 PROCESSES = ("poisson", "bursty")
 LOADS = (0.25, 0.5, 0.8, 1.2)     # × modeled capacity; 1.2 = past saturation
 TRACED_CELL = ("bursty", 1.2)     # the cell --trace exports
+# the traced cell's series (counter tracks), filled by run() for __main__
+TRACED_SERIES: list = []
 
 
 def scale_params(scale: str) -> dict:
@@ -97,8 +111,15 @@ def run(scale: str = "quick", tracer=None, seed: int = 0):
                 max_out_len=p["max_out_len"], seed=seed)
             requests = generate_requests(tcfg, cfg.vocab_size)
             registry = MetricsRegistry()
+            series = SeriesRegistry()
             cell_tracer = tracer if (process, load) == TRACED_CELL else None
-            rep = engine.run(requests, tracer=cell_tracer, registry=registry)
+            rep = engine.run(requests, tracer=cell_tracer, registry=registry,
+                             series=series)
+            monitor = SLOMonitor(serve_slo_targets(engine.decode_step_s))
+            monitor.evaluate(series)
+            if cell_tracer is not None:
+                monitor.emit_spans(cell_tracer)
+                TRACED_SERIES[:] = list(series)
             lat = rep.latency_summary()
             e2e, ttft = lat["serve.e2e_s"], lat["serve.ttft_s"]
             row = {
@@ -115,14 +136,21 @@ def run(scale: str = "quick", tracer=None, seed: int = 0):
                 "p99_s": e2e["p99"],
                 "ttft_p95_s": ttft["p95"],
                 "modeled_tok_s": rep.modeled_tok_s,
+                # SLO monitor verdicts (modeled): total breached seconds
+                # is gated; time-to-breach is higher-is-better (ungated)
+                "slo_breach_s": monitor.breach_seconds(),
+                "slo_ttb_s": monitor.time_to_breach(),
+                "saturated": monitor.saturated(),
                 # measured, host-dependent — reported, never gated
                 "measured_wall_s": round(rep.measured_wall_s, 3),
                 "measured_tok_s": round(rep.measured_tok_s, 1),
             }
             rows.append(row)
+            sat = " SAT" if row["saturated"] else ""
             print(f"  {row['cell']:14s} occ={row['occupancy']:5.2f} "
                   f"p50={row['p50_s']:.3e} p95={row['p95_s']:.3e} "
                   f"p99={row['p99_s']:.3e} "
+                  f"breach={row['slo_breach_s']:.2e}s{sat} "
                   f"modeled={row['modeled_tok_s']:.0f} tok/s "
                   f"measured={row['measured_tok_s']:.0f} tok/s", flush=True)
 
@@ -134,6 +162,11 @@ def run(scale: str = "quick", tracer=None, seed: int = 0):
             f"{process}: p95 did not grow past saturation: {sub}"
         assert sub[1.2]["occupancy"] >= sub[0.25]["occupancy"], \
             f"{process}: occupancy did not grow with load: {sub}"
+        # the saturation detector must fire past the knee and hold below it
+        assert sub[1.2]["slo_ttb_s"] is not None, \
+            f"{process}: past-saturation load never breached SLOs: {sub[1.2]}"
+        assert sub[0.25]["slo_breach_s"] == 0.0, \
+            f"{process}: SLO breached below the knee: {sub[0.25]}"
     done = all(r["completed"] + r["rejected"] == r["n_requests"]
                for r in rows)
     assert done, "requests lost: completed + rejected != offered"
@@ -142,15 +175,17 @@ def run(scale: str = "quick", tracer=None, seed: int = 0):
                 "throughput/latency (modeled roofline clock)",
                 rows, ["cell", "n_requests", "completed", "rejected",
                        "n_steps", "occupancy", "wall_clock_s", "p50_s",
-                       "p95_s", "p99_s", "modeled_tok_s",
-                       "measured_tok_s"])
+                       "p95_s", "p99_s", "slo_breach_s", "saturated",
+                       "modeled_tok_s", "measured_tok_s"])
     save_artifact("table6_serving", rows)
     save_bench("table6_serving", rows,
                meta={"scale": scale, "arch": cfg.name,
                      "n_slots": p["n_slots"],
                      "max_seq_len": p["max_seq_len"],
                      "decode_step_s": engine.decode_step_s,
-                     "capacity_tok_s": capacity, "loads": list(LOADS)})
+                     "capacity_tok_s": capacity, "loads": list(LOADS),
+                     "slo": {"ttft_p95_steps": 8.0, "e2e_p99_steps": 22.0,
+                             "window_steps": 256.0}})
     return rows
 
 
@@ -179,8 +214,16 @@ if __name__ == "__main__":
     if tracer is not None:
         from repro.obs import write_chrome_trace, write_jsonl
 
-        write_chrome_trace(tracer, trace_path)
+        counters = [s for s in TRACED_SERIES
+                    if s.name in ("serve.queue_depth",
+                                  "serve.batch_occupancy", "serve.tokens_s")]
+        assert len(counters) >= 3, \
+            f"traced cell missing counter series: {[s.name for s in counters]}"
+        assert any(s.name == "slo_breach" for s in tracer.spans), \
+            "traced cell emitted no SLO breach spans"
+        write_chrome_trace(tracer, trace_path, series=TRACED_SERIES)
         write_jsonl(tracer, trace_path + "l")
-        print(f"\ntrace: {len(tracer.spans)} spans "
+        print(f"\ntrace: {len(tracer.spans)} spans + "
+              f"{len(TRACED_SERIES)} counter tracks "
               f"({TRACED_CELL[0]}@{TRACED_CELL[1]:g} cell) -> {trace_path}; "
               "open at ui.perfetto.dev")

@@ -232,7 +232,8 @@ def _build_two_level_sync_step(intra, n_pods: int, inter_reducer,
 
 def sync_step_tags(sync_step) -> dict:
     """The comm tags ``build_sync_step`` stamped on a round, read through
-    ``jax.jit`` wrapping (tags survive on ``__wrapped__``).
+    any stack of wrappers that chain ``__wrapped__`` (``jax.jit``,
+    ``functools.wraps`` decorators like ``obs.ProfileSession.wrap``).
 
     Returns ``{"reducer", "streaming", "hierarchical"}`` plus
     ``{"n_pods", "inter_reducer"}`` for two-level rounds; absent tags come
@@ -241,9 +242,14 @@ def sync_step_tags(sync_step) -> dict:
     the exported timeline can't drift from the round the step executes.
     """
     def tag(name, default=None):
-        v = getattr(sync_step, name, None)
-        if v is None:
-            v = getattr(getattr(sync_step, "__wrapped__", None), name, None)
+        fn, v = sync_step, None
+        for _ in range(8):   # walk the full wrapper chain (cycle-safe)
+            if fn is None:
+                break
+            v = getattr(fn, name, None)
+            if v is not None:
+                break
+            fn = getattr(fn, "__wrapped__", None)
         return default if v is None else v
 
     tags = {"reducer": tag("reducer"),

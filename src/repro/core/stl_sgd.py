@@ -304,25 +304,30 @@ class StagewiseDriver:
             self.span_attrs.update(n_pods=self.n_pods,
                                    inter_reducer=self.inter_reducer.name)
 
-    def run(self, state: dict, batches, max_iters: Optional[int] = None,
-            tracer=None) -> DriverState:
-        ds = DriverState(state=state)
-        # a fresh Engine per run: its report is the run's comm ledger.
-        # Streaming rounds price identically to Star (same bytes, same
-        # serial α–β time) but additionally carry the per-leaf ledger.
-        # Hierarchical rounds price per hop: calibrated ICI intra-pod,
-        # the config's α–β link inter-pod — the same two hops the tagged
-        # sync_step executes, so modeled and executed bytes cannot diverge.
+    def build_topology(self):
+        """The priced Topology of one sync round — exactly the round the
+        tagged sync_step executes. Streaming rounds price identically to
+        Star (same bytes, same serial α–β time) but additionally carry
+        the per-leaf ledger; hierarchical rounds price per hop
+        (calibrated ICI intra-pod, the config's α–β link inter-pod).
+        Also what ``--profile`` uses to price one sync step."""
         if self.hierarchical:
-            topology = Hierarchical(n_pods=self.n_pods, intra=self.reducer,
-                                    inter=self.inter_reducer,
-                                    intra_net=link_model("ici"),
-                                    inter_net=self.net)
-        else:
-            topo_cls = StreamingStar if self.streaming else Star
-            topology = topo_cls(reducer=self.reducer, network=self.net)
-        engine = Engine(self.algorithm, self.tcfg, topology=topology,
-                        tracer=tracer)
+            return Hierarchical(n_pods=self.n_pods, intra=self.reducer,
+                                inter=self.inter_reducer,
+                                intra_net=link_model("ici"),
+                                inter_net=self.net)
+        topo_cls = StreamingStar if self.streaming else Star
+        return topo_cls(reducer=self.reducer, network=self.net)
+
+    def run(self, state: dict, batches, max_iters: Optional[int] = None,
+            tracer=None, series=None) -> DriverState:
+        ds = DriverState(state=state)
+        # a fresh Engine per run: its report is the run's comm ledger,
+        # priced on exactly the topology the sync_step executes —
+        # modeled and executed bytes cannot diverge.
+        engine = Engine(self.algorithm, self.tcfg,
+                        topology=self.build_topology(),
+                        tracer=tracer, series=series)
         ds = engine.run(DriverBackend(self, ds, batches, max_iters))
         log.info("comm_summary", reducer=self.reducer.name,
                  rounds=ds.rounds_total, comm_bytes=ds.comm_bytes_total,

@@ -36,6 +36,7 @@ from repro.comm.cost import NetworkModel
 from repro.engine.algorithm import Algorithm, get_algorithm
 from repro.engine.topology import Topology, get_topology
 from repro.obs import metrics as obs_metrics
+from repro.obs import series as obs_series
 from repro.obs.trace import CAT_COMM, CAT_CONTROL, MODELED, NULL_TRACER
 from repro.utils.logging import get_logger
 
@@ -74,8 +75,9 @@ class EngineReport:
     stages_run: int = 0
     hop_costs: List[Any] = field(default_factory=list)
     leaf_costs: List[Any] = field(default_factory=list)
-    # obs.metrics registry snapshot taken when the run finishes
+    # obs.metrics / obs.series registry snapshots taken at run end
     metrics: dict = field(default_factory=dict)
+    series: dict = field(default_factory=dict)
 
 
 def topology_for(cfg, reducer=None, topology=None) -> Topology:
@@ -102,7 +104,7 @@ class Engine:
     """Drives one Algorithm over one Topology through one backend."""
 
     def __init__(self, algorithm, cfg, topology=None, reducer=None,
-                 tracer=None):
+                 tracer=None, series=None):
         self.algorithm: Algorithm = get_algorithm(algorithm)
         self.cfg = cfg
         self.topology: Topology = topology_for(cfg, reducer=reducer,
@@ -111,9 +113,12 @@ class Engine:
         self.report = EngineReport()
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = obs_metrics.registry()
+        self.series: obs_series.SeriesRegistry = (
+            series if series is not None else obs_series.registry())
         self._bytes_per_round: Optional[int] = None
         self._time_per_round: Optional[float] = None
         self._modeled_t = 0.0   # cursor of the modeled α–β span timeline
+        self._cum_bytes = 0     # modeled payload bytes up to the cursor
 
     # -- comm-cost ledger ---------------------------------------------------
 
@@ -154,49 +159,78 @@ class Engine:
 
     # -- observability ------------------------------------------------------
 
-    def trace_rounds(self, stage, rounds: int):
-        """Emit ``rounds`` modeled-timeline round spans for ``stage``.
+    def _modeled_series(self, name: str, unit: str, help: str):
+        return self.series.series(name, clock=MODELED, unit=unit, help=help)
 
-        Each round lays its hops sequentially on the ledger's serial α–β
-        timeline (``round`` > ``reduce[hop]`` > ``reduce_leaf[leaf]`` >
-        ``broadcast`` marker), so summing the ``bytes`` attributes of all
-        ``reduce_leaf`` spans reconciles bit-exactly with
-        ``Engine.leaf_ledger()`` — both are ``rounds × LeafCost.bytes``.
+    def trace_rounds(self, stage, rounds: int):
+        """Advance the modeled α–β timeline by ``rounds`` rounds of
+        ``stage``, emitting per-round series and — when a tracer is
+        attached — round spans.
+
+        The cursor arithmetic (per-hop sequential adds) is one code path
+        whether or not spans are emitted, so the modeled timestamps on
+        the ``comm.*`` series are bit-identical between traced and
+        untraced runs and align exactly with the span end times.
+
+        Each traced round lays its hops sequentially (``round`` >
+        ``reduce[hop]`` > ``reduce_leaf[leaf]`` > ``broadcast`` marker),
+        so summing the ``bytes`` attributes of all ``reduce_leaf`` spans
+        reconciles bit-exactly with ``Engine.leaf_ledger()`` — both are
+        ``rounds × LeafCost.bytes``.
         """
-        tracer = self.tracer
-        if not tracer or rounds <= 0:
+        if rounds <= 0:
             return
+        tracer = self.tracer
+        s_bytes = self._modeled_series(
+            "comm.round_bytes", "B", "modeled payload bytes of each round")
+        s_time = self._modeled_series(
+            "comm.round_time_s", "s",
+            "modeled serial α–β link seconds of each round")
+        s_cum = self._modeled_series(
+            "comm.cum_bytes", "B",
+            "cumulative modeled payload bytes at each round boundary")
         leaf_by_hop: dict = {}
-        for lc in self.report.leaf_costs:
-            leaf_by_hop.setdefault(lc.hop, []).append(lc)
+        if tracer:
+            for lc in self.report.leaf_costs:
+                leaf_by_hop.setdefault(lc.hop, []).append(lc)
         for r in range(rounds):
             t = self._modeled_t
-            rid = tracer.begin("round", t, cat=CAT_CONTROL, track="round",
-                               clock=MODELED,
-                               attrs={"s": stage.s, "eta": stage.eta,
-                                      "k": stage.k})
+            if tracer:
+                rid = tracer.begin("round", t, cat=CAT_CONTROL,
+                                   track="round", clock=MODELED,
+                                   attrs={"s": stage.s, "eta": stage.eta,
+                                          "k": stage.k})
             hop_t = t
             for hop in self.report.hop_costs:
-                hid = tracer.begin(
-                    "reduce", hop_t, cat=CAT_COMM, track=f"hop/{hop.hop}",
-                    clock=MODELED,
-                    attrs={"hop": hop.hop, "reducer": hop.reducer,
-                           "bytes": hop.bytes, "time_s": hop.time_s})
-                leaf_t = hop_t
-                for lc in leaf_by_hop.get(hop.hop, ()):
-                    tracer.add(
-                        "reduce_leaf", leaf_t, leaf_t + lc.time_s,
-                        cat=CAT_COMM, track=f"leaf/{lc.leaf}", clock=MODELED,
-                        attrs={"leaf": lc.leaf, "path": lc.path,
-                               "hop": lc.hop, "bytes": lc.bytes,
-                               "time_s": lc.time_s})
-                    leaf_t += lc.time_s
+                if tracer:
+                    hid = tracer.begin(
+                        "reduce", hop_t, cat=CAT_COMM,
+                        track=f"hop/{hop.hop}", clock=MODELED,
+                        attrs={"hop": hop.hop, "reducer": hop.reducer,
+                               "bytes": hop.bytes, "time_s": hop.time_s})
+                    leaf_t = hop_t
+                    for lc in leaf_by_hop.get(hop.hop, ()):
+                        tracer.add(
+                            "reduce_leaf", leaf_t, leaf_t + lc.time_s,
+                            cat=CAT_COMM, track=f"leaf/{lc.leaf}",
+                            clock=MODELED,
+                            attrs={"leaf": lc.leaf, "path": lc.path,
+                                   "hop": lc.hop, "bytes": lc.bytes,
+                                   "time_s": lc.time_s})
+                        leaf_t += lc.time_s
                 hop_t += hop.time_s
-                tracer.end(hid, hop_t)
-            tracer.instant("broadcast", hop_t, cat=CAT_COMM, track="round",
-                           clock=MODELED, attrs={"s": stage.s})
-            tracer.end(rid, hop_t)
+                if tracer:
+                    tracer.end(hid, hop_t)
+            if tracer:
+                tracer.instant("broadcast", hop_t, cat=CAT_COMM,
+                               track="round", clock=MODELED,
+                               attrs={"s": stage.s})
+                tracer.end(rid, hop_t)
             self._modeled_t = hop_t
+            self._cum_bytes += self._bytes_per_round or 0
+            s_bytes.record(hop_t, float(self._bytes_per_round or 0))
+            s_time.record(hop_t, hop_t - t)
+            s_cum.record(hop_t, float(self._cum_bytes))
 
     def _count_stage(self, stage, status):
         """Report one stage's ledger into the obs.metrics registry."""
@@ -216,6 +250,23 @@ class Engine:
                    reducer=hop.reducer)
             ct.inc(status.rounds * hop.time_s, hop=hop.hop,
                    reducer=hop.reducer)
+
+    def _record_stage_series(self, stage):
+        """Per-stage objective-vs-cumulative-bytes curve: at each stage
+        boundary (the modeled cursor), sample the stage-end objective the
+        backend published (``train.stage_objective`` gauge) against the
+        bytes spent reaching it."""
+        self._modeled_series(
+            "train.stage_bytes", "B",
+            "cumulative modeled payload bytes at each stage boundary"
+        ).record(self._modeled_t, float(self._cum_bytes))
+        if "train.stage_objective" in self.metrics:
+            obj = self.metrics["train.stage_objective"].value(stage=stage.s)
+            if obj is not None:
+                self._modeled_series(
+                    "train.stage_objective", "",
+                    "stage-end objective at the modeled stage boundary"
+                ).record(self._modeled_t, float(obj))
 
     # -- run loop -----------------------------------------------------------
 
@@ -237,8 +288,8 @@ class Engine:
                                         "T": stage.T, "k": stage.k}) as sp:
                     status = backend.run_stage(stage, self)
                     sp.set(rounds=status.rounds, iters=status.iters)
-                if self.tracer:
-                    self.trace_rounds(stage, status.rounds)
+                self.trace_rounds(stage, status.rounds)
+                self._record_stage_series(stage)
                 self.report.stages_run += 1
                 self.report.rounds_total += status.rounds
                 self.report.iters_total += status.iters
@@ -251,4 +302,5 @@ class Engine:
                 if status.stop:
                     break
             self.report.metrics = self.metrics.snapshot()
+            self.report.series = self.series.snapshot()
         return backend.finish(self)

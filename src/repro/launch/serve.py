@@ -26,6 +26,7 @@ from repro.configs import get_arch
 from repro.models import transformer as TF
 from repro.obs import write_chrome_trace, write_jsonl
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.series import SeriesRegistry
 from repro.serve import (
     SchedulerConfig,
     ServeEngine,
@@ -64,8 +65,18 @@ def main(argv=None):
     ap.add_argument("--max-queue", type=int, default=64)
     ap.add_argument("--prefills-per-step", type=int, default=1)
     ap.add_argument("--trace", default=None, metavar="OUT.json",
-                    help="export the request/decode span timeline as a "
-                         "Perfetto-loadable Chrome trace (+ .jsonl log)")
+                    help="export the request/decode span timeline plus the "
+                         "serve.* counter tracks (queue depth, batch "
+                         "occupancy, tokens/s) as a Perfetto-loadable "
+                         "Chrome trace (+ .jsonl log)")
+    ap.add_argument("--profile", action="store_true",
+                    help="wall-time the jitted prefill/decode steps "
+                         "(block-until-ready) against the roofline prices "
+                         "and print the modeled-vs-measured skew table")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="also bracket the run in a jax.profiler trace "
+                         "session writing XPlane artifacts to DIR "
+                         "(implies --profile)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -104,7 +115,18 @@ def main(argv=None):
         from repro.utils.logging import RUN_ID
         tracer = Tracer(run_id=RUN_ID)
     registry = MetricsRegistry()
-    report = engine.run(requests, tracer=tracer, registry=registry)
+    series = SeriesRegistry()
+    profile = None
+    if args.profile or args.profile_dir:
+        from repro.obs import ProfileSession
+        profile = ProfileSession(logdir=args.profile_dir)
+    if profile is not None:
+        with profile:
+            report = engine.run(requests, tracer=tracer, registry=registry,
+                                series=series, profile=profile)
+    else:
+        report = engine.run(requests, tracer=tracer, registry=registry,
+                            series=series)
 
     n_rej = len(report.rejected)
     log.info("served %d/%d requests (%d rejected), %d decode steps, "
@@ -118,8 +140,12 @@ def main(argv=None):
     for name, s in report.latency_summary().items():
         log.info("  %-20s p50=%.2e p95=%.2e p99=%.2e (n=%d)", name,
                  s["p50"], s["p95"], s["p99"], s["count"])
+    if profile is not None:
+        from repro.obs import format_skew_table
+        profile.emit_spans(tracer)
+        print(format_skew_table(profile.skew_table()))
     if tracer is not None:
-        write_chrome_trace(tracer, args.trace)
+        write_chrome_trace(tracer, args.trace, series=series)
         write_jsonl(tracer, args.trace + "l")   # foo.json -> foo.jsonl
         log.info("trace_written", path=args.trace, spans=len(tracer.spans))
     return report

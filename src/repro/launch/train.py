@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import SHAPES, get_arch
-from repro.configs.base import TrainConfig
+from repro.configs.base import ShapeConfig, TrainConfig
 from repro.core import local_sgd as LS
 from repro.core.stl_sgd import StagewiseDriver
 from repro.data.synthetic import make_token_stream
@@ -93,8 +93,17 @@ def main(argv=None):
                          "rebuild the config and restore without flags")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="export a Perfetto-loadable Chrome trace of the "
-                         "run's span timeline to this path (plus a .jsonl "
-                         "span log next to it)")
+                         "run's span timeline (plus the comm.*/train.* "
+                         "counter tracks) to this path, and a .jsonl span "
+                         "log next to it")
+    ap.add_argument("--profile", action="store_true",
+                    help="wall-time the jitted train/sync steps (block-"
+                         "until-ready) against their modeled prices and "
+                         "print the modeled-vs-measured skew table")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="also bracket the run in a jax.profiler trace "
+                         "session writing XPlane artifacts to DIR "
+                         "(implies --profile)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -144,7 +153,32 @@ def main(argv=None):
         train_fn = jax.jit(train_local)
     sync_fn = jax.jit(sync_step)
 
+    profile = None
+    if args.profile or args.profile_dir:
+        from repro.obs import ProfileSession
+        from repro.serve.engine import DeviceModel
+
+        profile = ProfileSession(logdir=args.profile_dir)
+        # one train step = C clients × batch × seq tokens on the roofline
+        train_price = DeviceModel().step_time_s(
+            cfg, ShapeConfig("train_step", args.seq, C * args.batch,
+                             "train"))
+        # the sync round is priced from the driver's own topology, which
+        # only exists below — resolve the price lazily per call
+        sync_price = {"v": 0.0}
+        train_fn = profile.wrap(train_fn, "train_step", train_price)
+        # wrapping keeps the build_sync_step tags reachable through the
+        # __wrapped__ chain, so the driver still prices the tagged round
+        sync_fn = profile.wrap(sync_fn, "sync_step",
+                               lambda *a, **k: sync_price["v"])
+
     driver = StagewiseDriver(tcfg, train_fn, sync_fn, uses_center=uses_center)
+    if profile is not None:
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            state["params"])
+        sync_price["v"] = sum(
+            h.time_s for h in driver.build_topology().hop_costs(template, C))
     batches = synthetic_batches(cfg, C, args.batch, args.seq, args.seed,
                                 args.non_iid)
     tracer = None
@@ -153,16 +187,27 @@ def main(argv=None):
         from repro.utils.logging import RUN_ID
         tracer = Tracer(run_id=RUN_ID)
     t0 = time.time()
-    ds = driver.run(state, batches, max_iters=args.steps, tracer=tracer)
+    if profile is not None:
+        with profile:
+            ds = driver.run(state, batches, max_iters=args.steps,
+                            tracer=tracer)
+    else:
+        ds = driver.run(state, batches, max_iters=args.steps, tracer=tracer)
     dt = time.time() - t0
     log.info("done: %d iters, %d comm rounds, %.1fs (%.1f it/s)",
              ds.iters_total, ds.rounds_total, dt, ds.iters_total / max(dt, 1e-9))
     for r in ds.results:
         log.info("  stage %d: k=%d rounds=%d loss=%.4f", r.stage, r.k,
                  r.rounds, r.mean_loss)
+    if profile is not None:
+        from repro.obs import format_skew_table
+        profile.emit_spans(tracer)
+        print(format_skew_table(profile.skew_table()))
     if tracer is not None:
+        from repro.obs import series as obs_series
         from repro.obs import write_chrome_trace, write_jsonl
-        write_chrome_trace(tracer, args.trace)
+        write_chrome_trace(tracer, args.trace,
+                           series=obs_series.registry())
         write_jsonl(tracer, args.trace + "l")   # foo.json -> foo.jsonl
         log.info("trace_written", path=args.trace, spans=len(tracer.spans))
     if args.ckpt_dir:

@@ -10,8 +10,19 @@ The cross-cutting layer that turns every run into trace data:
   * ``obs.metrics`` — process-local counters/gauges/histograms all three
     backends and the comm reducers report into; snapshotted into
     ``EngineReport.metrics``.
-  * ``obs.export`` — JSONL span logs and Chrome-trace/Perfetto JSON
-    (one track per client/pod/leaf, spans colored by phase) that
+  * ``obs.series`` — ``(t, value)`` time series on the same three clocks
+    with windowed derived views (rate, sliding mean/p50/p95/p99) and a
+    strict clock-domain guard; the trajectory the point-in-time metrics
+    can't show.
+  * ``obs.slo`` — sliding-window SLO monitoring over serve series (p95
+    TTFT / p99 e2e / throughput targets), breach spans on the virtual
+    clock, and the open-loop saturation detector table6 reports.
+  * ``obs.profile`` — ``jax.profiler`` session wrapper + block-until-
+    ready wall timing for jitted steps; the modeled-vs-measured skew
+    table behind ``launch/{train,serve}.py --profile``.
+  * ``obs.export`` — JSONL span logs (round-tripping via ``read_jsonl``)
+    and Chrome-trace/Perfetto JSON (one track per client/pod/leaf, spans
+    colored by phase, one counter track per series) that
     https://ui.perfetto.dev opens directly.
   * ``obs.diff`` — schema-validated BENCH_*.json loading and numeric
     regression diffing (``tools/bench_diff.py``, CI).
@@ -31,6 +42,7 @@ from repro.obs.diff import (
     validate_bench,
 )
 from repro.obs.export import (
+    read_jsonl,
     span_record,
     to_chrome_trace,
     write_chrome_trace,
@@ -44,6 +56,9 @@ from repro.obs.metrics import (
     registry,
     reset,
 )
+from repro.obs.profile import ProfileSession, StepTiming, format_skew_table
+from repro.obs.series import ClockDomainError, Series, SeriesRegistry
+from repro.obs.slo import SLOBreach, SLOMonitor, SLOTarget, serve_slo_targets
 from repro.obs.trace import (
     CAT_COMM,
     CAT_COMPUTE,
@@ -61,8 +76,12 @@ from repro.obs.trace import (
 __all__ = [
     "BenchSchemaError", "Delta", "DIFF_KEYS", "DirDiff", "diff_benches",
     "diff_dirs", "load_bench", "row_key", "validate_bench",
-    "span_record", "to_chrome_trace", "write_chrome_trace", "write_jsonl",
+    "read_jsonl", "span_record", "to_chrome_trace", "write_chrome_trace",
+    "write_jsonl",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "registry", "reset",
+    "ProfileSession", "StepTiming", "format_skew_table",
+    "ClockDomainError", "Series", "SeriesRegistry",
+    "SLOBreach", "SLOMonitor", "SLOTarget", "serve_slo_targets",
     "CAT_COMM", "CAT_COMPUTE", "CAT_CONTROL", "CAT_MERGE", "MODELED",
     "NULL_TRACER", "NullTracer", "Span", "Tracer", "VIRTUAL", "WALL",
 ]

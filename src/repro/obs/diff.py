@@ -33,10 +33,13 @@ ID_KEYS = ("dataset", "net", "dist", "algo", "mode", "reducer", "schedule",
            "slowdown", "leaves", "arch", "shape", "program", "cell")
 
 # monitored numeric columns: modeled comm bytes/seconds, round counts, the
-# event runtime's modeled wall-clock and the serving driver's modeled
-# latency percentiles — higher is worse for all of them
+# event runtime's modeled wall-clock, the serving driver's modeled latency
+# percentiles and its total SLO-breach seconds — higher is worse for all
+# of them (time-to-breach is higher-is-better and therefore NOT gated;
+# the breach-seconds column catches the same saturation regressions)
 DIFF_KEYS = ("comm_bytes", "comm_time_s", "rounds", "wall_clock_s",
-             "blocking_s", "streaming_s", "p50_s", "p95_s", "p99_s")
+             "blocking_s", "streaming_s", "p50_s", "p95_s", "p99_s",
+             "slo_breach_s")
 
 
 class BenchSchemaError(ValueError):

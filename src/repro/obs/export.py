@@ -1,9 +1,12 @@
 """Span export: JSONL logs and Chrome-trace / Perfetto JSON timelines.
 
-Two serializations of a ``Tracer``'s span list:
+Serializations of a ``Tracer``'s span list (plus ``obs.series`` curves):
 
-  * ``write_jsonl`` — one JSON object per span (the raw log; greppable,
-    diffable, append-friendly);
+  * ``write_jsonl`` / ``read_jsonl`` — one JSON object per span (the raw
+    log; greppable, diffable, append-friendly). The pair round-trips:
+    ``read_jsonl(write_jsonl(tracer, p))`` reconstructs identical
+    ``Span`` objects, so CI trace artifacts can be re-exported to
+    Perfetto offline;
   * ``to_chrome_trace`` / ``write_chrome_trace`` — the Chrome Trace Event
     Format (JSON object with a ``traceEvents`` list) that
     https://ui.perfetto.dev opens directly. Each clock domain becomes one
@@ -12,12 +15,17 @@ Two serializations of a ``Tracer``'s span list:
     ``leaf/2``, ``server``, …), spans are complete ("X") events colored
     by phase category, and span attributes land in ``args`` so clicking a
     ``reduce_leaf`` slice shows its leaf path, payload bytes and modeled
-    seconds.
+    seconds. Pass ``series=`` (a ``SeriesRegistry`` or list of
+    ``Series``) to additionally render each series as a *counter track*
+    ("C" events) inside its clock's process — queue depth, batch
+    occupancy and tokens/s curves sit directly under the span waterfall
+    that explains them.
 
 Timestamps: Chrome traces count microseconds; all tracer clocks count
 seconds, so every t0/duration is scaled by 1e6. Virtual/modeled traces
-start at 0 by construction; wall spans are rebased to the earliest wall
-timestamp so the three processes align at t=0.
+start at 0 by construction; wall spans (and wall series samples) are
+rebased to the earliest wall timestamp so the three processes align at
+t=0.
 """
 from __future__ import annotations
 
@@ -72,6 +80,40 @@ def write_jsonl(source: Union[Tracer, List[Span]], path: str) -> str:
     return path
 
 
+def read_jsonl(path: str) -> List[Span]:
+    """Load a ``write_jsonl`` span log back into ``Span`` objects.
+
+    The inverse of ``span_record``: a written log reads back into spans
+    whose ``key()`` fingerprints match the originals (for
+    JSON-representable attribute values — anything else was stringified
+    on write), so CI ``.jsonl`` artifacts re-export to Perfetto offline:
+    ``write_chrome_trace(read_jsonl(p), out)``.
+    """
+    spans: List[Span] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            spans.append(Span(id=int(d["id"]), parent=int(d["parent"]),
+                              name=d["name"], cat=d["cat"],
+                              track=d["track"], clock=d["clock"],
+                              t0=float(d["t0"]), t1=float(d["t1"]),
+                              attrs=dict(d.get("attrs") or {})))
+    return spans
+
+
+def _series_list(series) -> list:
+    """Normalize the ``series=`` argument: None, one Series, a list, or a
+    SeriesRegistry (anything iterable yielding Series)."""
+    if series is None:
+        return []
+    if hasattr(series, "samples") and hasattr(series, "clock"):
+        return [series]
+    return list(series)
+
+
 def _track_ids(spans: List[Span]) -> Dict[Tuple[str, str], int]:
     """(clock, track) -> tid, assigned in sorted-name order per clock so
     Perfetto rows come out grouped and deterministic (server/engine rows
@@ -87,18 +129,27 @@ def _track_ids(spans: List[Span]) -> Dict[Tuple[str, str], int]:
 
 
 def to_chrome_trace(source: Union[Tracer, List[Span]],
-                    run_id: Optional[str] = None) -> dict:
-    """Render spans as a Chrome Trace Event Format object.
+                    run_id: Optional[str] = None,
+                    series=None) -> dict:
+    """Render spans (and optional series) as a Chrome Trace Event object.
 
     Load the written file at https://ui.perfetto.dev (or
     chrome://tracing): one process per clock domain, one thread row per
     span track, durations in microseconds, attributes under ``args``.
+    ``series`` (a ``SeriesRegistry``, a list of ``Series``, or one
+    ``Series``) adds one counter track per series — "C" events named by
+    the series, one sample per recorded ``(t, value)``, in the process
+    of the series' clock so counters align with the span timestamps.
     """
     spans = _spans(source)
+    srs = _series_list(series)
     if run_id is None and isinstance(source, Tracer):
         run_id = source.run_id
     tids = _track_ids(spans)
-    wall0 = min((s.t0 for s in spans if s.clock == WALL), default=0.0)
+    wall0 = min((s.t0 for s in spans if s.clock == WALL), default=None)
+    if wall0 is None:
+        wall0 = min((t for sr in srs if sr.clock == WALL
+                     for t, _ in sr.samples()), default=0.0)
     events: List[dict] = []
     seen_proc = set()
     for (clock, track), tid in sorted(tids.items(),
@@ -110,6 +161,17 @@ def to_chrome_trace(source: Union[Tracer, List[Span]],
                            "tid": 0, "args": {"name": pname}})
         events.append({"ph": "M", "name": "thread_name", "pid": pid,
                        "tid": tid, "args": {"name": track}})
+    for sr in srs:
+        pid, pname = _PROCESSES[sr.clock]
+        if pid not in seen_proc:
+            seen_proc.add(pid)
+            events.append({"ph": "M", "name": "process_name", "pid": pid,
+                           "tid": 0, "args": {"name": pname}})
+        base = wall0 if sr.clock == WALL else 0.0
+        for t, v in sr.samples():
+            events.append({"ph": "C", "name": sr.name, "pid": pid,
+                           "tid": 0, "ts": (t - base) * 1e6,
+                           "args": {"value": v}})
     for s in spans:
         pid, _ = _PROCESSES[s.clock]
         t0 = s.t0 - (wall0 if s.clock == WALL else 0.0)
@@ -129,8 +191,9 @@ def to_chrome_trace(source: Union[Tracer, List[Span]],
 
 
 def write_chrome_trace(source: Union[Tracer, List[Span]], path: str,
-                       run_id: Optional[str] = None) -> str:
+                       run_id: Optional[str] = None, series=None) -> str:
     """Write ``to_chrome_trace`` output to ``path`` (Perfetto-loadable)."""
     with open(path, "w") as f:
-        json.dump(to_chrome_trace(source, run_id=run_id), f, default=str)
+        json.dump(to_chrome_trace(source, run_id=run_id, series=series), f,
+                  default=str)
     return path

@@ -18,6 +18,8 @@ plain dicts that serialize into BENCH/report artifacts.
 """
 from __future__ import annotations
 
+import random
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -98,16 +100,31 @@ class Histogram(Metric):
     """count/sum/min/max + p50/p95/p99 summary per label set (staleness,
     round times, request latencies).
 
-    Raw samples are retained per label set so percentiles are exact
-    (numpy-identical linear interpolation), not bucket approximations —
-    the registry is process-local and runs are bounded, so sample memory
-    is O(observations), which the serving latency ledger needs anyway
-    for its p50/p95/p99 columns.
+    Raw samples are retained per label set *up to* ``cap`` (default
+    4096): below it percentiles are exact (numpy-identical linear
+    interpolation); past it the retained set becomes a uniform reservoir
+    (Algorithm R, deterministically seeded per (metric, label set)) so
+    memory stays O(cap) at cohort scale while percentiles degrade to an
+    unbiased approximation — ``summary()`` flags this with
+    ``approx: True``, never silently. count/sum/min/max stay exact at
+    any volume. Bounded consumers that need exact tails (the serve
+    latency ledger's p50/p95/p99 columns) pin a cap above their sample
+    counts.
     """
 
     kind: str = "histogram"
+    cap: int = 4096
     stats: Dict[LabelKey, dict] = field(default_factory=dict)
     samples: Dict[LabelKey, List[float]] = field(default_factory=dict)
+    _rngs: Dict[LabelKey, random.Random] = field(default_factory=dict,
+                                                 repr=False)
+
+    def _rng(self, k: LabelKey) -> random.Random:
+        rng = self._rngs.get(k)
+        if rng is None:
+            seed = zlib.crc32(f"{self.name}|{_label_str(k)}".encode())
+            rng = self._rngs[k] = random.Random(seed)
+        return rng
 
     def observe(self, value: float, **labels):
         v = float(value)
@@ -118,7 +135,15 @@ class Histogram(Metric):
         st["sum"] += v
         st["min"] = min(st["min"], v)
         st["max"] = max(st["max"], v)
-        self.samples.setdefault(k, []).append(v)
+        xs = self.samples.setdefault(k, [])
+        if len(xs) < self.cap:
+            xs.append(v)
+        else:
+            # reservoir sampling (Algorithm R): keep each of the count
+            # observations with equal probability cap/count
+            j = self._rng(k).randrange(st["count"])
+            if j < self.cap:
+                xs[j] = v
 
     def percentile(self, q: float, **labels) -> Optional[float]:
         """Exact q-th percentile of everything observed under ``labels``
@@ -133,6 +158,8 @@ class Histogram(Metric):
         xs = self.samples.get(k)
         for q in PERCENTILES:
             out[f"p{q:g}"] = _percentile(xs, q) if xs else None
+        # approx: percentiles come from a reservoir, not the full set
+        out["approx"] = bool(xs is not None and st["count"] > len(xs))
         return out
 
     def summary(self, **labels) -> Optional[dict]:
@@ -153,10 +180,10 @@ class MetricsRegistry:
     def __init__(self):
         self._metrics: Dict[str, Metric] = {}
 
-    def _get(self, cls, name: str, unit: str, help: str) -> Metric:
+    def _get(self, cls, name: str, unit: str, help: str, **kw) -> Metric:
         m = self._metrics.get(name)
         if m is None:
-            m = cls(name=name, unit=unit, help=help)
+            m = cls(name=name, unit=unit, help=help, **kw)
             self._metrics[name] = m
         elif not isinstance(m, cls):
             raise TypeError(
@@ -170,9 +197,12 @@ class MetricsRegistry:
     def gauge(self, name: str, unit: str = "", help: str = "") -> Gauge:
         return self._get(Gauge, name, unit, help)
 
-    def histogram(self, name: str, unit: str = "",
-                  help: str = "") -> Histogram:
-        return self._get(Histogram, name, unit, help)
+    def histogram(self, name: str, unit: str = "", help: str = "",
+                  cap: Optional[int] = None) -> Histogram:
+        """``cap`` bounds retained raw samples (reservoir past it); only
+        honored at first registration — registration stays idempotent."""
+        kw = {} if cap is None else {"cap": cap}
+        return self._get(Histogram, name, unit, help, **kw)
 
     def snapshot(self) -> dict:
         """Serializable view of every registered series, sorted by name."""

@@ -151,6 +151,7 @@ class EventBackend(VmapSimulatorBackend):
         self._stage_masks: List[np.ndarray] = []
         self._tracer = engine.tracer
         self._metrics = engine.metrics
+        self._series = engine.series
         self.asynchronous = bool(
             getattr(engine.algorithm.sync_policy, "asynchronous", False))
 
@@ -271,6 +272,9 @@ class EventBackend(VmapSimulatorBackend):
                                   "bytes": self._leaf_bytes[leaf],
                                   "active": active})
 
+    def _vseries(self, name: str, unit: str, help: str):
+        return self._series.series(name, clock=VIRTUAL, unit=unit, help=help)
+
     def _replay_rounds(self, round_steps: List[int], masks: List[np.ndarray]):
         """Advance the event clock over the executed barrier rounds.
 
@@ -285,8 +289,15 @@ class EventBackend(VmapSimulatorBackend):
         dropouts = self._metrics.counter(
             "runtime.dropout_events", unit="events",
             help="uploads lost / rounds missed to dropout")
+        s_active = self._vseries(
+            "runtime.active_clients", "clients",
+            "clients participating in the barrier round / holding work")
+        s_round = self._vseries(
+            "runtime.round_time_s", "s",
+            "virtual-clock duration of each barrier round")
         for kk, mask in zip(round_steps, masks):
             start = self.clock.now
+            s_active.record(start, float(int(mask.sum())))
             rid = tracer.begin(
                 "round", start, cat=CAT_CONTROL, track="server",
                 clock=VIRTUAL,
@@ -321,6 +332,7 @@ class EventBackend(VmapSimulatorBackend):
             self.clock.advance(merge_t)
             self.trace.append((merge_t, "merge", -1))
             self._round_times.append(merge_t)
+            s_round.record(merge_t, merge_t - start)
             if tracer:
                 tracer.instant("broadcast", merge_t, cat=CAT_COMM,
                                track="server", clock=VIRTUAL)
@@ -410,6 +422,16 @@ class EventBackend(VmapSimulatorBackend):
         staleness_hist = self._metrics.histogram(
             "runtime.merge_staleness", unit="server cycles (normalized)",
             help="staleness weight input of async merges")
+        s_active = self._vseries(
+            "runtime.active_clients", "clients",
+            "clients participating in the barrier round / holding work")
+        s_inflight = self._vseries(
+            "runtime.inflight_merges", "uploads",
+            "async uploads in flight toward the server")
+        s_stale = self._vseries(
+            "runtime.merge_staleness", "server cycles (normalized)",
+            "staleness weight input of each async merge")
+        n_uploading = 0
         # stage-start barrier: everyone pulls the current server model
         for i in range(self.N):
             self._c_params[i] = self.server
@@ -473,6 +495,7 @@ class EventBackend(VmapSimulatorBackend):
                     self._c_params[cid] = self.server
                     self._c_mom[cid], self._c_t[cid] = pre_mom, pre_t
                     dispatch(cid)
+                    s_active.record(now, float(len(inflight)))
                     continue
                 delta = jax.tree.map(
                     lambda p, r: p.astype(jnp.float32) - r.astype(jnp.float32),
@@ -483,8 +506,13 @@ class EventBackend(VmapSimulatorBackend):
                 inflight[cid] = (kk, v_pull, payload)
                 self.queue.push(now + c.upload_time(self._msg_bytes),
                                 "arrival", cid)
+                n_uploading += 1
+                s_inflight.record(now, float(n_uploading))
+                s_active.record(now, float(len(inflight)))
             elif ev.kind == "arrival":
                 kk, v_pull, payload = inflight.pop(cid)
+                n_uploading -= 1
+                s_inflight.record(now, float(n_uploading))
                 # cycles beyond the natural pipeline lag: racing the other
                 # N-1 clients' merges once is keeping pace, not staleness
                 staleness = max(
@@ -501,6 +529,7 @@ class EventBackend(VmapSimulatorBackend):
                                           "staleness": staleness})
                 staleness_hist.observe(staleness,
                                        reducer=red.name)
+                s_stale.record(now, float(staleness))
                 self.server = red.merge(self.server, payload, staleness,
                                         self.N)
                 self.server_version += 1
@@ -526,6 +555,7 @@ class EventBackend(VmapSimulatorBackend):
                     status.stop = True
                 self._c_params[cid] = self.server
                 dispatch(cid)
+                s_active.record(now, float(len(inflight)))
 
         # stage-end barrier: drain done above; record the closing objective
         v = float(self.eval_fn(self.server))
@@ -566,7 +596,7 @@ def run(loss_fn, init_params, client_data, cfg: TrainConfig, eval_fn, *,
         target: Optional[float] = None, lr_alpha: float = 0.0,
         chunk_rounds: int = 32, reducer=None, topology=None,
         hetero: Optional[Heterogeneity] = None,
-        schedule=None, tracer=None) -> RuntimeResult:
+        schedule=None, tracer=None, series=None) -> RuntimeResult:
     """Run ``cfg.algo`` on the event runtime; the ``simulate.run`` of clocks.
 
     Same problem signature as ``core.simulate.run``. ``cfg.async_mode``
@@ -598,10 +628,10 @@ def run(loss_fn, init_params, client_data, cfg: TrainConfig, eval_fn, *,
                            bandwidth_gbps=cfg.comm_bandwidth_gbps)
         engine = Engine(algo, cfg, topology=Star(reducer=merge_red,
                                                  network=net),
-                        tracer=tracer)
+                        tracer=tracer, series=series)
     else:
         engine = Engine(algo, cfg, topology=topology, reducer=reducer,
-                        tracer=tracer)
+                        tracer=tracer, series=series)
     backend = EventBackend(loss_fn, init_params, client_data, eval_fn,
                            hetero=hetero, schedule=schedule,
                            eval_every=eval_every,

@@ -48,6 +48,7 @@ from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 from repro.models import transformer as TF
 from repro.obs import CAT_COMPUTE, CAT_CONTROL, VIRTUAL
 from repro.obs import metrics as obs_metrics
+from repro.obs import series as obs_series
 from repro.runtime.clock import Clock
 from repro.serve import ledger as serve_ledger
 from repro.serve.ledger import RequestRecord
@@ -109,6 +110,7 @@ class ServeReport:
     measured_wall_s: float
     measured_tok_s: float
     registry: obs_metrics.MetricsRegistry = field(repr=False, default=None)
+    series: obs_series.SeriesRegistry = field(repr=False, default=None)
 
     @property
     def completed(self) -> List[RequestRecord]:
@@ -237,10 +239,30 @@ class ServeEngine:
     # -- the loop -----------------------------------------------------------
 
     def run(self, requests: List[Request], tracer=None,
-            registry: Optional[obs_metrics.MetricsRegistry] = None
-            ) -> ServeReport:
-        """Serve ``requests`` (open loop) until the system drains."""
+            registry: Optional[obs_metrics.MetricsRegistry] = None,
+            series: Optional[obs_series.SeriesRegistry] = None,
+            profile=None) -> ServeReport:
+        """Serve ``requests`` (open loop) until the system drains.
+
+        ``series`` (default: the process registry) receives the live
+        virtual-clock telemetry — ``serve.queue_depth`` /
+        ``serve.batch_occupancy`` per decode step, the cumulative
+        ``serve.tokens_total`` (plus its derived ``serve.tokens_s`` rate)
+        and the per-request latency sample series. ``profile`` (an
+        ``obs.ProfileSession``) wall-times every jitted prefill/decode
+        call against its modeled price for the skew table.
+        """
         registry = registry or obs_metrics.registry()
+        series = series if series is not None else obs_series.registry()
+        s_queue = series.series(
+            "serve.queue_depth", clock=VIRTUAL, unit="requests",
+            help="waiting requests at each decode-step boundary")
+        s_occ = series.series(
+            "serve.batch_occupancy", clock=VIRTUAL, unit="slots",
+            help="active slots in each decode step")
+        s_tok = series.series(
+            "serve.tokens_total", clock=VIRTUAL, unit="tokens",
+            help="cumulative generated tokens (prefill + decode)")
         events = offered_load(requests)
         by_id = {r.id: r for r in requests}
         clock = Clock()
@@ -257,6 +279,7 @@ class ServeEngine:
         n_steps = n_prefills = 0
         occupancy_sum = 0
         tokens_out = 0
+        gen_total = 0
         run_span = tracer.span("serve_run", track="server", attrs={
             "n_requests": len(requests), "n_slots": self.n_slots}) \
             if tracer else None
@@ -301,9 +324,15 @@ class ServeEngine:
                 prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
                 fe = (jnp.asarray(req.frontend[None], jnp.bfloat16)
                       if req.frontend is not None else None)
-                tok1, cache1 = (self._prefill(self.params, fresh, prompt, fe)
-                                if fe is not None else
-                                self._prefill(self.params, fresh, prompt))
+                p_args = ((self.params, fresh, prompt, fe)
+                          if fe is not None
+                          else (self.params, fresh, prompt))
+                if profile is not None:
+                    tok1, cache1 = profile.step(
+                        "serve.prefill", self.prefill_s(req),
+                        self._prefill, *p_args)
+                else:
+                    tok1, cache1 = self._prefill(*p_args)
                 stacked, toks = self._join(
                     stacked, toks, cache1, tok1, slot)
                 n_prefills += 1
@@ -311,6 +340,8 @@ class ServeEngine:
                 rec.first_token_s = clock.now
                 rec.tokens.append(int(jax.device_get(tok1)[0, 0]))
                 rec.token_times_s.append(clock.now)
+                gen_total += 1
+                s_tok.record(clock.now, float(gen_total))
                 slots[slot] = _SlotState(record=rec, generated=1)
                 if rec.n_out == 1:
                     _retire(slot, clock.now)
@@ -318,10 +349,19 @@ class ServeEngine:
             active = [i for i, st in enumerate(slots) if st is not None]
             if active:
                 t0 = clock.now
-                toks, stacked = self._decode(self.params, toks, stacked)
+                s_queue.record(t0, float(sched.queue_depth))
+                s_occ.record(t0, float(len(active)))
+                if profile is not None:
+                    toks, stacked = profile.step(
+                        "serve.decode_step", self.decode_step_s,
+                        self._decode, self.params, toks, stacked)
+                else:
+                    toks, stacked = self._decode(self.params, toks, stacked)
                 clock.advance(clock.now + self.decode_step_s)
                 n_steps += 1
                 occupancy_sum += len(active)
+                gen_total += len(active)
+                s_tok.record(clock.now, float(gen_total))
                 host_toks = np.asarray(jax.device_get(toks))
                 for i in active:
                     st = slots[i]
@@ -345,6 +385,11 @@ class ServeEngine:
         recs = [records[r.id] for r in sorted(requests, key=lambda r: r.id)]
         serve_ledger.emit_spans(tracer, recs)
         serve_ledger.publish_metrics(registry, recs)
+        serve_ledger.publish_series(series, recs)
+        if len(s_tok):
+            # windowed throughput over ~64 decode steps of virtual time
+            series.add(s_tok.rate(64.0 * self.decode_step_s,
+                                  name="serve.tokens_s"))
         makespan = clock.now
         mean_occ = occupancy_sum / n_steps if n_steps else 0.0
         g = registry.gauge
@@ -364,4 +409,4 @@ class ServeEngine:
             makespan_s=makespan, decode_step_s=self.decode_step_s,
             mean_occupancy=mean_occ, modeled_tok_s=modeled_tok_s,
             measured_wall_s=measured_wall_s, measured_tok_s=measured_tok_s,
-            registry=registry)
+            registry=registry, series=series)

@@ -19,7 +19,13 @@ The ledger is surfaced through ``repro.obs`` twice:
     occupancy;
   * ``publish_metrics`` feeds the ``serve.*`` histograms/counters whose
     p50/p95/p99 summaries the latency tables read (see the metric table
-    in docs/serving.md).
+    in docs/serving.md). The latency histograms pin a high sample cap
+    (65536) so the table columns stay *exact* percentiles of the ledger
+    even past the default reservoir threshold;
+  * ``publish_series`` feeds the per-request latency *sample series*
+    (``serve.ttft_s`` / ``serve.tpot_s`` / ``serve.e2e_s``, one sample at
+    each request's completion time) that the sliding-window SLO monitor
+    (``obs.slo``) evaluates.
 
 Records hold modeled times only — deterministic per (traffic seed,
 scheduler config); measured wall-clock lives in the engine report, never
@@ -32,6 +38,12 @@ from typing import List, Optional
 
 from repro.obs import CAT_COMPUTE, CAT_CONTROL, VIRTUAL
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.series import SeriesRegistry
+
+# latency histograms keep raw samples up to this cap so the p50/p95/p99
+# table columns stay exact percentiles of the ledger (never reservoir
+# approximations) at any realistic smoke/quick/full request volume
+LATENCY_SAMPLE_CAP = 65536
 
 
 @dataclass
@@ -136,15 +148,19 @@ def publish_metrics(registry: MetricsRegistry, records: List[RequestRecord]):
     hists = {
         "queue_wait_s": registry.histogram(
             "serve.queue_wait_s", unit="s",
-            help="admission-control delay (admit - arrival)"),
+            help="admission-control delay (admit - arrival)",
+            cap=LATENCY_SAMPLE_CAP),
         "ttft_s": registry.histogram(
             "serve.ttft_s", unit="s",
-            help="time to first token (queue wait + prefill)"),
+            help="time to first token (queue wait + prefill)",
+            cap=LATENCY_SAMPLE_CAP),
         "tpot_s": registry.histogram(
             "serve.tpot_s", unit="s",
-            help="per-output-token decode time"),
+            help="per-output-token decode time",
+            cap=LATENCY_SAMPLE_CAP),
         "e2e_s": registry.histogram(
-            "serve.e2e_s", unit="s", help="end-to-end request latency"),
+            "serve.e2e_s", unit="s", help="end-to-end request latency",
+            cap=LATENCY_SAMPLE_CAP),
     }
     for r in records:
         req.inc(1, outcome=r.outcome)
@@ -155,3 +171,30 @@ def publish_metrics(registry: MetricsRegistry, records: List[RequestRecord]):
             v = getattr(r, name)
             if v is not None:
                 h.observe(v)
+
+
+def publish_series(series: SeriesRegistry, records: List[RequestRecord]):
+    """Feed the ledger into per-request latency sample series.
+
+    One sample per completed request on the virtual clock — TTFT at the
+    moment the first token lands, TPOT/e2e at request finish — so the
+    sliding-window SLO monitor (``obs.slo``) sees latencies in the order
+    the serving system actually produced them. Samples arrive in request
+    id order; the ``Series`` sorts by time lazily on read.
+    """
+    s_ttft = series.series("serve.ttft_s", clock=VIRTUAL, unit="s",
+                           help="per-request time to first token")
+    s_tpot = series.series("serve.tpot_s", clock=VIRTUAL, unit="s",
+                           help="per-request per-output-token decode time")
+    s_e2e = series.series("serve.e2e_s", clock=VIRTUAL, unit="s",
+                          help="per-request end-to-end latency")
+    for r in records:
+        if r.outcome != "completed":
+            continue
+        if r.ttft_s is not None:
+            s_ttft.record(r.first_token_s, r.ttft_s)
+        if r.finish_s is not None:
+            if r.tpot_s is not None:
+                s_tpot.record(r.finish_s, r.tpot_s)
+            if r.e2e_s is not None:
+                s_e2e.record(r.finish_s, r.e2e_s)
