@@ -15,18 +15,32 @@ modeled wall-clock (the stage budget is work-conserving — fast clients keep
 stepping while stragglers lag, and their late deltas merge with
 staleness-decayed weights) at <1% final-objective drift.
 
-The second half is the {blocking, streaming} *upload-schedule* axis on a
-multi-leaf MLP (8 leaves): per-leaf uploads start as each layer's last
-local step completes (reverse-layer order, ``runtime.StreamingSchedule``)
-instead of one monolithic message after compute_done, so upload overlaps
-the final step's remaining backward compute. Claims under test, at the
-same default straggler cohort: dense streaming ≥ 1.2× modeled wall-clock
-over blocking at every slowdown, parameter trajectories bit-exact across
-schedules (streaming is pure clock accounting), and the per-leaf comm
-ledger reconciling with the blocking tree-level totals (bytes exactly,
-seconds to float-sum precision). int8 messages shrink the β term that
-streaming hides, so their overlap win is asserted looser (≥ 1.05×) —
-compression and overlap attack the same bytes.
+The second half is the streaming axis on a multi-leaf MLP (8 leaves),
+three tables deep:
+
+  * 5b {blocking, streaming} uploads: per-leaf uploads start as each
+    layer's last local step completes (reverse-layer order,
+    ``runtime.StreamingSchedule``) instead of one monolithic message
+    after compute_done, so upload overlaps the final step's remaining
+    backward compute. Dense streaming ≥ 1.2× modeled wall-clock over
+    blocking at every slowdown; int8 messages shrink the β term that
+    streaming hides, so their overlap win is asserted looser (≥ 1.05×) —
+    compression and overlap attack the same bytes.
+  * 5c the downlink (``count_downlink=True``): the billed consensus
+    broadcast streams per leaf in server-completion order instead of one
+    dense monolith after the merge. The broadcast doesn't compress, so
+    the win survives message compression (≥ 1.15× dense / 1.1× int8).
+  * 5d streaming∘hierarchical (2 pods, billed downlink): full streaming
+    — per-leaf intra uploads + per-leaf WAN forwarding + per-leaf
+    broadcast — must compound the uplink-only comparator's win at ≥2×
+    stragglers (``StreamingSchedule(uplink_only=True)``, the PR-4
+    semantics kept addressable as ``upload_schedule="streaming-uplink"``).
+
+Everywhere: parameter trajectories bit-exact across schedules and
+topology streaming variants (streaming is pure clock accounting), and
+the per-(leaf, hop) comm ledger — uplink, intra/inter-pod, downlink —
+reconciling with the blocking tree-level totals (bytes exactly, seconds
+to float-sum precision).
 
     PYTHONPATH=src python -m benchmarks.table5_straggler \\
         [--smoke|--full] [--streaming] [--trace out.json]
@@ -69,6 +83,14 @@ MAX_OBJ_DRIFT = 0.01
 # final step's backward pass; int8's β term is ~4× smaller, so less is
 # left to hide (see docs/streaming.md)
 MIN_STREAM_SPEEDUP = {"dense": 1.2, "int8": 1.05}
+# downlink-billed rounds: streaming additionally hides the (always-dense)
+# consensus broadcast behind the server's own merging, so the bar holds
+# for both reducers — the downlink payload doesn't compress
+MIN_DOWNLINK_SPEEDUP = {"dense": 1.15, "int8": 1.1}
+# streaming∘hierarchical: streaming the WAN hop + downlink must compound
+# the uplink-only overlap win at >=2x stragglers (measured ≥1.4x; the bar
+# leaves headroom for link-model recalibration)
+MIN_WAN_COMPOUND_GAIN = 1.2
 
 
 def make_problem(scale: str, n_clients: int):
@@ -123,7 +145,185 @@ def streaming_cfg(reducer: str, schedule: str, slowdown: float) -> TrainConfig:
                        straggler_slowdown=slowdown)
 
 
-def run_streaming(scale: str = "quick", tracer=None):
+def _accumulate_trace_expect(expect, res, schedule: str) -> None:
+    """Fold one traced run's leaf_ledger into the per-span-name byte
+    totals the exported trace must reconcile against (see export_trace).
+
+    Per-leaf client uploads (and the streamed WAN hop) appear as
+    ``reduce_leaf`` spans; the streamed downlink as ``broadcast_leaf``;
+    a billed monolithic downlink as ``broadcast`` transfer spans."""
+    if expect is None:
+        return
+    rows = res.leaf_ledger or []
+    if schedule in ("streaming", "streaming-uplink"):
+        expect["reduce_leaf"] += sum(
+            r["bytes"] for r in rows if r["hop"] in ("uplink", "intra_pod"))
+    if schedule == "streaming":
+        # only the full streaming schedule streams the inter-pod WAN hop
+        expect["reduce_leaf"] += sum(
+            r["bytes"] for r in rows if r["hop"] == "inter_pod")
+    down = sum(r["bytes"] for r in rows if r["hop"] == "downlink")
+    if down:
+        key = "broadcast_leaf" if schedule == "streaming" else "broadcast"
+        expect[key] += down
+
+
+def _assert_bit_exact(results: dict, label: str) -> bool:
+    """All runs in ``results`` must share params and (round, objective)
+    history bit-exactly — the schedule/topology axes are pure clock."""
+    ref_name = next(iter(results))
+    ref = results[ref_name]
+    for name, res in results.items():
+        same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(ref.params),
+                                   jax.tree.leaves(res.params)))
+        assert same, f"{label}: {name} diverged from {ref_name}"
+        assert [(h.round, h.value) for h in ref.history] \
+            == [(h.round, h.value) for h in res.history], \
+            f"{label}: {name} history diverged from {ref_name}"
+    return True
+
+
+def run_downlink(scale: str = "quick", tracer=None, expect=None):
+    """The downlink axis: billed consensus broadcasts, streamed per leaf.
+
+    ``count_downlink=True`` prices the server→client broadcast of every
+    round. Blocking ships it as one dense monolith after the merge;
+    streaming ships leaf l as soon as the server finishes reducing it, so
+    the next round starts ~one leaf (not one model) after the merge. The
+    broadcast is dense for every reducer, so — unlike the uplink axis —
+    the overlap win survives message compression."""
+    n_clients = 8
+    loss_fn, eval_fn, p0, data = make_mlp_problem(scale, n_clients)
+    n_leaves = len(jax.tree.leaves(p0))
+    rows = []
+    print(f"\ndownlink axis — billed dense broadcast, streamed per leaf:")
+    for red in REDUCERS:
+        for slow in SLOWDOWNS:
+            res = {}
+            for sched in ("blocking", "streaming"):
+                cfg = dataclasses.replace(streaming_cfg(red, sched, slow),
+                                          count_downlink=True)
+                res[sched] = runtime.run(loss_fn, p0, data, cfg, eval_fn,
+                                         eval_every=16, tracer=tracer)
+                _accumulate_trace_expect(expect, res[sched], sched)
+            blk, stm = res["blocking"], res["streaming"]
+            _assert_bit_exact(res, f"downlink ({red}, {slow}x)")
+            speed = blk.wall_clock_s / max(stm.wall_clock_s, 1e-12)
+            # the ledger now carries downlink rows, and still reconciles
+            hops = {l["hop"] for l in stm.leaf_ledger}
+            assert hops == {"uplink", "downlink"}, hops
+            leaf_bytes = sum(l["bytes"] for l in stm.leaf_ledger)
+            assert leaf_bytes == blk.comm_bytes, (leaf_bytes, blk.comm_bytes)
+            leaf_time = sum(l["time_s"] for l in stm.leaf_ledger)
+            assert abs(leaf_time - blk.comm_time_s) \
+                <= 1e-9 * max(blk.comm_time_s, 1.0)
+            down_bytes = sum(l["bytes"] for l in stm.leaf_ledger
+                             if l["hop"] == "downlink")
+            ok = speed >= MIN_DOWNLINK_SPEEDUP[red]
+            rows.append({"reducer": red, "slowdown": slow,
+                         "leaves": n_leaves, "rounds": stm.rounds,
+                         "blocking_s": blk.wall_clock_s,
+                         "streaming_s": stm.wall_clock_s,
+                         "speedup": f"{speed:.2f}x",
+                         "downlink_bytes": down_bytes, "ok": ok})
+            print(f"  {red:5s} {slow:.0f}x blocking={blk.wall_clock_s:8.4f}s "
+                  f"streaming={stm.wall_clock_s:8.4f}s ({speed:.2f}x)",
+                  flush=True)
+    print_table("Table 5c — streamed downlink vs monolithic broadcast "
+                "(count_downlink=True, trajectories bit-exact)",
+                rows, ["reducer", "slowdown", "leaves", "rounds",
+                       "blocking_s", "streaming_s", "speedup",
+                       "downlink_bytes"])
+    bad = [r for r in rows if not r["ok"]]
+    assert not bad, \
+        f"streamed downlink missed the overlap bar {MIN_DOWNLINK_SPEEDUP}: {bad}"
+    save_artifact("table5_downlink", rows)
+    save_bench("table5_downlink", rows,
+               meta={"scale": scale, "n_clients": n_clients,
+                     "n_leaves": n_leaves,
+                     "straggler_frac": STRAGGLER_FRAC,
+                     "min_speedup": MIN_DOWNLINK_SPEEDUP})
+    return rows
+
+
+def run_hier_streaming(scale: str = "quick", tracer=None, expect=None):
+    """The streaming∘hierarchical axis: compose every overlap.
+
+    Three schedules over the two-level (2-pod) round with billed
+    downlink: blocking (serial intra hop, serial WAN hop, monolithic
+    broadcast), streaming-uplink (per-leaf intra uploads only — the
+    uplink-only comparator), and full streaming (per-leaf intra uploads,
+    per-leaf WAN forwarding overlapping the intra reduction of later
+    leaves, per-leaf broadcast). Params are bit-exact across all three
+    (``Hierarchical(streaming=True)`` folds the same per-leaf rng as the
+    blocking two-level round); at >=2x stragglers the full composition
+    must compound the uplink-only win."""
+    n_clients, n_pods = 8, 2
+    loss_fn, eval_fn, p0, data = make_mlp_problem(scale, n_clients)
+    n_leaves = len(jax.tree.leaves(p0))
+    schedules = ("blocking", "streaming-uplink", "streaming")
+    rows = []
+    print(f"\nstreaming∘hierarchical axis — {n_pods}-pod two-level round, "
+          "WAN hop + downlink streamed per leaf:")
+    for red in REDUCERS:
+        for slow in SLOWDOWNS:
+            res = {}
+            for sched in schedules:
+                cfg = dataclasses.replace(
+                    streaming_cfg(red, sched, slow),
+                    topology="streaming-hier", n_pods=n_pods,
+                    inter_reducer=red, count_downlink=True)
+                res[sched] = runtime.run(loss_fn, p0, data, cfg, eval_fn,
+                                         eval_every=16, tracer=tracer)
+                _accumulate_trace_expect(expect, res[sched], sched)
+            blk, up, full = (res["blocking"], res["streaming-uplink"],
+                             res["streaming"])
+            _assert_bit_exact(res, f"streaming∘hier ({red}, {slow}x)")
+            # the two-level per-leaf ledger reconciles across all 3 hops
+            hops = {l["hop"] for l in full.leaf_ledger}
+            assert hops == {"intra_pod", "inter_pod", "downlink"}, hops
+            leaf_bytes = sum(l["bytes"] for l in full.leaf_ledger)
+            assert leaf_bytes == blk.comm_bytes, (leaf_bytes, blk.comm_bytes)
+            speed_up = blk.wall_clock_s / max(up.wall_clock_s, 1e-12)
+            speed_full = blk.wall_clock_s / max(full.wall_clock_s, 1e-12)
+            gain = up.wall_clock_s / max(full.wall_clock_s, 1e-12)
+            # ISSUE acceptance: the composition compounds the uplink-only
+            # overlap win under real stragglers
+            ok = (slow < 2.0
+                  or (speed_up > 1.0 and gain >= MIN_WAN_COMPOUND_GAIN))
+            rows.append({"reducer": red, "slowdown": slow,
+                         "leaves": n_leaves, "rounds": full.rounds,
+                         "blocking_s": blk.wall_clock_s,
+                         "uplink_only_s": up.wall_clock_s,
+                         "full_stream_s": full.wall_clock_s,
+                         "speedup_uplink": f"{speed_up:.2f}x",
+                         "speedup_full": f"{speed_full:.2f}x",
+                         "wan_gain": f"{gain:.2f}x", "ok": ok})
+            print(f"  {red:5s} {slow:.0f}x blocking={blk.wall_clock_s:8.4f}s "
+                  f"uplink-only={up.wall_clock_s:8.4f}s "
+                  f"full={full.wall_clock_s:8.4f}s "
+                  f"(up {speed_up:.2f}x, full {speed_full:.2f}x)",
+                  flush=True)
+    print_table("Table 5d — streaming∘hierarchical: uplink-only vs full "
+                "per-leaf round (2 pods, billed downlink, bit-exact)",
+                rows, ["reducer", "slowdown", "rounds", "blocking_s",
+                       "uplink_only_s", "full_stream_s", "speedup_uplink",
+                       "speedup_full", "wan_gain"])
+    bad = [r for r in rows if not r["ok"]]
+    assert not bad, \
+        (f"full streaming failed to compound the uplink-only win by "
+         f">={MIN_WAN_COMPOUND_GAIN}x at >=2x stragglers: {bad}")
+    save_artifact("table5_hier_streaming", rows)
+    save_bench("table5_hier_streaming", rows,
+               meta={"scale": scale, "n_clients": n_clients,
+                     "n_pods": n_pods, "n_leaves": n_leaves,
+                     "straggler_frac": STRAGGLER_FRAC,
+                     "min_wan_gain": MIN_WAN_COMPOUND_GAIN})
+    return rows
+
+
+def run_streaming(scale: str = "quick", tracer=None, expect=None):
     """The {blocking, streaming} axis: per-leaf overlap on a multi-leaf MLP."""
     n_clients = 8
     loss_fn, eval_fn, p0, data = make_mlp_problem(scale, n_clients)
@@ -140,6 +340,7 @@ def run_streaming(scale: str = "quick", tracer=None):
                                          streaming_cfg(red, sched, slow),
                                          eval_fn, eval_every=16,
                                          tracer=tracer)
+                _accumulate_trace_expect(expect, res[sched], sched)
             blk, stm = res["blocking"], res["streaming"]
             speed = blk.wall_clock_s / max(stm.wall_clock_s, 1e-12)
             # streaming is pure clock accounting: same seed ⇒ identical
@@ -262,26 +463,31 @@ def _parse_trace(argv):
     return None
 
 
-def export_trace(tracer, path: str, streaming_rows):
+def export_trace(tracer, path: str, expect):
     """Write the Chrome trace, after reconciling it against the ledger.
 
-    The virtual-clock ``reduce_leaf`` spans (one per per-leaf upload the
-    event runtime scheduled) must sum — in bytes, bit-exactly — to the
-    streaming runs' ``leaf_ledger`` totals; a trace that disagrees with the
+    Every per-leaf transfer the event runtime scheduled appears as a
+    virtual-clock span — ``reduce_leaf`` (uplink, intra-pod, streamed WAN
+    hop), ``broadcast_leaf`` (streamed downlink), ``broadcast`` (billed
+    monolithic downlink) — and each family must sum, in bytes and
+    bit-exactly, to the matching ``leaf_ledger`` rows accumulated by the
+    runs (``_accumulate_trace_expect``). A trace that disagrees with the
     comm ledger would be decoration, not observability.
     """
     from repro.obs import VIRTUAL, write_chrome_trace, write_jsonl
 
-    span_bytes = sum(int(s.attrs["bytes"]) for s in tracer.spans
-                     if s.name == "reduce_leaf" and s.clock == VIRTUAL)
-    ledger_bytes = sum(int(r["leaf_bytes"]) for r in streaming_rows)
-    assert span_bytes == ledger_bytes, \
-        (f"trace reduce_leaf bytes {span_bytes} != streaming leaf_ledger "
-         f"bytes {ledger_bytes}")
+    recon = {}
+    for name, want in expect.items():
+        got = sum(int(s.attrs["bytes"]) for s in tracer.spans
+                  if s.name == name and s.clock == VIRTUAL
+                  and "bytes" in s.attrs)
+        assert got == want, \
+            f"trace {name} bytes {got} != leaf_ledger bytes {want}"
+        recon[name] = got
     write_chrome_trace(tracer, path)
     write_jsonl(tracer, path + "l")   # out.json -> out.jsonl
     print(f"\ntrace: {len(tracer.spans)} spans -> {path} "
-          f"(reduce_leaf bytes reconcile with leaf_ledger: {span_bytes} B); "
+          f"(span bytes reconcile with leaf_ledger: {recon}); "
           "open at ui.perfetto.dev")
 
 
@@ -295,10 +501,13 @@ if __name__ == "__main__":
     if trace_path:
         from repro.obs import Tracer
         tracer = Tracer(run_id="table5")
-    streaming_rows = []
+    expect = ({"reduce_leaf": 0, "broadcast_leaf": 0, "broadcast": 0}
+              if tracer is not None else None)
     if "--streaming" not in sys.argv:
         run(scale, tracer=tracer)
     if "--no-streaming" not in sys.argv:
-        streaming_rows = run_streaming(scale, tracer=tracer)
+        run_streaming(scale, tracer=tracer, expect=expect)
+        run_downlink(scale, tracer=tracer, expect=expect)
+        run_hier_streaming(scale, tracer=tracer, expect=expect)
     if tracer is not None:
-        export_trace(tracer, trace_path, streaming_rows)
+        export_trace(tracer, trace_path, expect)

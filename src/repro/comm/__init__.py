@@ -18,6 +18,7 @@ from repro.comm.reducer import (
     TopKMean,
     get_reducer,
     reduce_streaming,
+    supports_leaf_bytes,
 )
 
 __all__ = [
@@ -35,4 +36,5 @@ __all__ = [
     "reduce_streaming",
     "round_bytes",
     "round_time",
+    "supports_leaf_bytes",
 ]

@@ -178,4 +178,13 @@ class TrainConfig:
     # remaining compute — modeled time only, trajectories are bit-exact
     # across schedules. The execution-side analogue is topology="streaming"
     # (engine.StreamingStar: the pjit driver's per-leaf reduce).
+    # "streaming-uplink" restores the uplink-only overlap (blocking WAN hop
+    # + monolithic broadcast) — the comparator the full streaming round's
+    # downlink/WAN overlap is measured against.
     upload_schedule: str = "blocking"
+    # bill the dense server→client broadcast as its own downlink hop
+    # (comm.NetworkModel.count_downlink). Off by default (multicast,
+    # reducer-independent — see docs/cost_model.md); when on, the blocking
+    # schedule ships it monolithically after the merge while the streaming
+    # schedule ships leaf l as soon as the server finishes reducing it.
+    count_downlink: bool = False

@@ -109,7 +109,12 @@ def build_sync_step(reducer=None, *, base_seed: int = 0,
     leaf folds the same per-leaf rng), but the reduce is expressed as
     per-leaf data-independent ops, so when the step runs under jit XLA's
     scheduler is free to interleave leaf l's reduce with the remaining
-    leaves' compute instead of waiting on one whole-tree collective.
+    leaves' compute instead of waiting on one whole-tree collective. The
+    consensus broadcast is emitted per leaf inside the same loop (the
+    downlink mirror of the per-leaf uplink). Composes with
+    ``hierarchical=True``: the two-level round then runs per leaf too
+    (``Hierarchical(streaming=True)`` — intra-pod reduce feeding the
+    inter-pod reduce leaf by leaf).
 
     ``hierarchical=True`` emits the *two-level* round
     (``engine.Hierarchical`` semantics, see ``docs/topologies.md``): an
@@ -132,20 +137,16 @@ def build_sync_step(reducer=None, *, base_seed: int = 0,
     dense = isinstance(reducer, DenseMean)
 
     if hierarchical:
-        if streaming:
-            raise ValueError(
-                "streaming=True composes the per-leaf round with a flat "
-                "star; streaming the hierarchical inter-pod hop is not "
-                "implemented yet (ROADMAP: 'Streaming beyond the uplink')")
         if n_pods < 1:
             raise ValueError(f"n_pods must be >= 1, got {n_pods}")
         if n_pods > 1:
             return _build_two_level_sync_step(reducer, n_pods, inter_reducer,
-                                              base_seed)
+                                              base_seed, streaming)
         # n_pods == 1: a single pod has no inter-pod hop to cross — the
         # round degenerates to the flat round with the intra reducer
-        # (bit-exact with the flat path by construction; the inter
-        # reducer is unused because no WAN link exists)
+        # (streaming or blocking; bit-exact with the flat path by
+        # construction; the inter reducer is unused because no WAN link
+        # exists)
 
     def sync_step(state):
         n = jax.tree.leaves(state["params"])[0].shape[0]
@@ -156,22 +157,24 @@ def build_sync_step(reducer=None, *, base_seed: int = 0,
                 tree_mean_leading(state["params"]), n)
             out = dict(state, params=params, opt=opt)
         elif dense:
-            # streaming dense round: per-leaf mean + rebroadcast (state
-            # tree untouched, like the blocking dense round; rng unused)
-            consensus, _ = reduce_streaming(reducer, state["params"], None,
-                                            rng)
-            out = dict(state, params=tree_broadcast_leading(consensus, n),
-                       opt=opt)
+            # streaming dense round: per-leaf mean + per-leaf rebroadcast
+            # inside the same reversed loop (state tree untouched, like
+            # the blocking dense round; rng unused) — leaf l's reduce and
+            # downlink broadcast form one data-independent unit under jit
+            params, _ = reduce_streaming(reducer, state["params"], None,
+                                         rng, broadcast_n=n)
+            out = dict(state, params=params, opt=opt)
         else:
             comm = state.get("comm")
             if comm is None:
                 comm = reducer.init_state(state["params"])
-            consensus, comm = (
-                reduce_streaming(reducer, state["params"], comm, rng)
-                if streaming else
-                reducer.reduce(state["params"], comm, rng))
-            out = dict(state, params=tree_broadcast_leading(consensus, n),
-                       opt=opt, comm=comm)
+            if streaming:
+                params, comm = reduce_streaming(reducer, state["params"],
+                                                comm, rng, broadcast_n=n)
+            else:
+                consensus, comm = reducer.reduce(state["params"], comm, rng)
+                params = tree_broadcast_leading(consensus, n)
+            out = dict(state, params=params, opt=opt, comm=comm)
         return out
 
     # tag the step with its reducer (and round structure) so
@@ -184,7 +187,7 @@ def build_sync_step(reducer=None, *, base_seed: int = 0,
 
 
 def _build_two_level_sync_step(intra, n_pods: int, inter_reducer,
-                               base_seed: int):
+                               base_seed: int, streaming: bool = False):
     """The hierarchical (n_pods > 1) round behind ``build_sync_step``.
 
     One ``engine.Hierarchical.reduce`` per sync — the same code path the
@@ -194,11 +197,19 @@ def _build_two_level_sync_step(intra, n_pods: int, inter_reducer,
     state tree untouched: ``Hierarchical`` collapses it to the flat mean
     and its reducer state is inert, so the round matches the flat dense
     round exactly, key set included.
+
+    ``streaming=True`` executes the same round per leaf
+    (``Hierarchical(streaming=True)``): leaf l's intra-pod reduce feeds
+    its inter-pod reduce immediately, in reverse-layer order, so under
+    jit the WAN collective of late leaves is free to overlap the
+    intra-pod reduction of the early ones. Bit-exact with the blocking
+    two-level round (same per-leaf rng folds on both hops).
     """
     from repro.engine.topology import Hierarchical
 
     inter = get_reducer(inter_reducer)
-    topo = Hierarchical(n_pods=n_pods, intra=intra, inter=inter)
+    topo = Hierarchical(n_pods=n_pods, intra=intra, inter=inter,
+                        streaming=streaming)
 
     def sync_step(state):
         n = jax.tree.leaves(state["params"])[0].shape[0]
@@ -223,7 +234,7 @@ def _build_two_level_sync_step(intra, n_pods: int, inter_reducer,
 
     # tags: the driver prices the topology the round actually executes
     sync_step.reducer = intra
-    sync_step.streaming = False
+    sync_step.streaming = streaming
     sync_step.hierarchical = True
     sync_step.n_pods = n_pods
     sync_step.inter_reducer = inter
@@ -298,13 +309,6 @@ def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
     hierarchical = client_axis == "pod"
     two_level = inter_reducer is not None
     if two_level:
-        if streaming:
-            # same refusal as build_sync_step/StagewiseDriver — the flag
-            # must not be silently dropped
-            raise ValueError(
-                "streaming=True composes the per-leaf round with a flat "
-                "star; streaming the hierarchical inter-pod hop is not "
-                "implemented yet (ROADMAP: 'Streaming beyond the uplink')")
         axes = (client_axis if isinstance(client_axis, (tuple, list))
                 else (client_axis,))
         if "pod" not in axes or "pod" not in mesh.axis_names:
@@ -368,7 +372,8 @@ def build_train_steps(cfg: ArchConfig, mesh, *, client_axis: str = "data",
         return dict(state, params=params, opt=opt, step=state["step"] + 1), {
             "loss": jnp.mean(loss)}
 
-    sync_step = (build_sync_step(reducer, hierarchical=True, n_pods=n_pods,
+    sync_step = (build_sync_step(reducer, streaming=streaming,
+                                 hierarchical=True, n_pods=n_pods,
                                  inter_reducer=inter_reducer)
                  if two_level else
                  build_sync_step(reducer, streaming=streaming))

@@ -217,24 +217,24 @@ class StagewiseDriver:
             reducer if reducer is not None else tcfg.reducer,
             quant_bits=tcfg.quant_bits, topk_frac=tcfg.topk_frac)
         topo_spec = getattr(tcfg, "topology", "star")
-        hier_spec = topo_spec in ("hier", "hierarchical", "pods")
+        stream_hier_specs = ("streaming-hier", "hier-streaming",
+                             "streaming-hierarchical")
+        hier_spec = (topo_spec in ("hier", "hierarchical", "pods")
+                     or topo_spec in stream_hier_specs)
         # a sync_step built with build_sync_step(streaming=True) implies the
         # per-leaf round even when the config says plain "star"
         self.streaming = (topo_spec in ("streaming", "streaming-star",
                                         "stream")
+                          or topo_spec in stream_hier_specs
                           or bool(tag("streaming", False)))
         # ... and a hierarchical-tagged sync_step implies the two-level
         # round the same way. cfg n_pods=1 is the flat degenerate case
         # (no inter-pod link exists; build_sync_step emits the flat round).
+        # streaming and hierarchical compose: the per-leaf two-level round
+        # (Hierarchical(streaming=True)) prices like the blocking one.
         self.hierarchical = bool(tag("hierarchical", False)) or (
             hier_spec and getattr(tcfg, "n_pods", 2) > 1)
         if self.hierarchical:
-            if self.streaming:
-                raise ValueError(
-                    "streaming the hierarchical inter-pod hop is not "
-                    "implemented yet (ROADMAP: 'Streaming beyond the "
-                    "uplink') — use topology='hier' with a blocking sync "
-                    "step or topology='streaming' with a flat one")
             if not tag("hierarchical", False):
                 # cfg promises a two-level round but the step transmits a
                 # flat average: pricing Hierarchical would ledger bytes
@@ -271,9 +271,12 @@ class StagewiseDriver:
                                "streaming-star", "stream") and not hier_spec:
             raise ValueError(
                 f"unknown topology spec for StagewiseDriver: "
-                f"{tcfg.topology!r} (expected star/streaming/hierarchical)")
-        self.net = NetworkModel(latency_s=tcfg.comm_latency_s,
-                                bandwidth_gbps=tcfg.comm_bandwidth_gbps)
+                f"{tcfg.topology!r} (expected star/streaming/hierarchical/"
+                f"streaming-hier)")
+        self.net = NetworkModel(
+            latency_s=tcfg.comm_latency_s,
+            bandwidth_gbps=tcfg.comm_bandwidth_gbps,
+            count_downlink=getattr(tcfg, "count_downlink", False))
         self.algorithm = get_algorithm(tcfg.algo)
         policy = self.algorithm.sync_policy
         if getattr(policy, "asynchronous", False):
@@ -315,7 +318,8 @@ class StagewiseDriver:
             return Hierarchical(n_pods=self.n_pods, intra=self.reducer,
                                 inter=self.inter_reducer,
                                 intra_net=link_model("ici"),
-                                inter_net=self.net)
+                                inter_net=self.net,
+                                streaming=self.streaming)
         topo_cls = StreamingStar if self.streaming else Star
         return topo_cls(reducer=self.reducer, network=self.net)
 

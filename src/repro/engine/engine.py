@@ -91,7 +91,8 @@ def topology_for(cfg, reducer=None, topology=None) -> Topology:
     if isinstance(topology, Topology):
         return topology
     net = NetworkModel(latency_s=cfg.comm_latency_s,
-                       bandwidth_gbps=cfg.comm_bandwidth_gbps)
+                       bandwidth_gbps=cfg.comm_bandwidth_gbps,
+                       count_downlink=getattr(cfg, "count_downlink", False))
     return get_topology(
         topology if topology is not None else getattr(cfg, "topology", "star"),
         reducer=reducer if reducer is not None else cfg.reducer,

@@ -26,15 +26,17 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.comm.cost import NetworkModel, link_model, round_bytes, round_time
-from repro.comm.reducer import DenseMean, Reducer, get_reducer, reduce_streaming
+from repro.comm.cost import (NetworkModel, dense_bytes, link_model,
+                             round_time)
+from repro.comm.reducer import (DenseMean, Reducer, get_reducer,
+                                reduce_streaming, supports_leaf_bytes)
 
 
 @dataclass(frozen=True)
 class HopCost:
     """Modeled cost of one hop of one communication round."""
 
-    hop: str            # "uplink" | "intra_pod" | "inter_pod"
+    hop: str            # "uplink" | "intra_pod" | "inter_pod" | "downlink"
     reducer: str
     network: NetworkModel
     bytes: int          # total traffic crossing the hop per round
@@ -64,6 +66,27 @@ def _leaf_paths(template) -> List[str]:
     """Human-readable key paths for every leaf of a template pytree."""
     paths, _ = jax.tree_util.tree_flatten_with_path(template)
     return [jax.tree_util.keystr(p) for p, _ in paths]
+
+
+def _hop_leaf_costs(hop: str, leaf_bytes, paths, net: NetworkModel, *,
+                    mult: int, tmult: Optional[int] = None) -> List[LeafCost]:
+    """One hop's LeafCost rows from per-leaf message bytes.
+
+    ``bytes`` is ``mult`` messages' worth of traffic per leaf; time is
+    ``tmult`` (default ``mult``) messages' serialization on ``net`` — they
+    differ only for parallel intra-pod links, where the hop's byte count is
+    the total traffic but its time sees one pod's. The hop latency α is
+    attributed to the hop's first leaf once.
+    """
+    tmult = mult if tmult is None else tmult
+    out = []
+    for i, (b, p) in enumerate(zip(leaf_bytes, paths)):
+        t = tmult * b / net.bandwidth_Bps
+        if i == 0:
+            t += net.latency_s
+        out.append(LeafCost(leaf=i, path=p, hop=hop,
+                            bytes=mult * b, time_s=t))
+    return out
 
 
 class Topology:
@@ -148,32 +171,35 @@ class Star(Topology):
         return self.reducer.reduce(stacked, state, rng)
 
     def hop_costs(self, template, n_clients: int) -> List[HopCost]:
-        up = round_bytes(self.reducer, template, n_clients, self.network)
-        return [HopCost(hop="uplink", reducer=self.reducer.name,
+        up = n_clients * self.reducer.message_bytes(template)
+        hops = [HopCost(hop="uplink", reducer=self.reducer.name,
                         network=self.network, bytes=up,
                         time_s=round_time(self.network, up))]
+        if self.network.count_downlink:
+            # the dense server broadcast is its own hop (cost_model.md:
+            # reducer-independent, billed only on count_downlink links) —
+            # sum of hop bytes still equals ``cost.round_bytes``
+            down = n_clients * dense_bytes(template)
+            hops.append(HopCost(hop="downlink", reducer="dense",
+                                network=self.network, bytes=down,
+                                time_s=round_time(self.network, down)))
+        return hops
 
     def leaf_costs(self, template, n_clients: int) -> List[LeafCost]:
-        try:
-            leaf_bytes = self.reducer.leaf_message_bytes(template)
-        except NotImplementedError:
+        if not supports_leaf_bytes(self.reducer):
             # custom reducers predating the per-leaf protocol (only
             # message_bytes overridden) still run — without a leaf ledger
             return []
-        if self.network.count_downlink:
-            # mirror round_bytes: the dense broadcast is billed per leaf
-            # too, so the ledger still reconciles on count_downlink links
-            down = DenseMean().leaf_message_bytes(template)
-            leaf_bytes = [b + d for b, d in zip(leaf_bytes, down)]
+        leaf_bytes = self.reducer.leaf_message_bytes(template)
         paths = _leaf_paths(template)
-        out = []
-        for i, (b, p) in enumerate(zip(leaf_bytes, paths)):
-            total = n_clients * b
-            t = total / self.network.bandwidth_Bps
-            if i == 0:  # the hop latency α is paid once per round
-                t += self.network.latency_s
-            out.append(LeafCost(leaf=i, path=p, hop="uplink",
-                                bytes=total, time_s=t))
+        out = _hop_leaf_costs("uplink", leaf_bytes, paths, self.network,
+                              mult=n_clients)
+        if self.network.count_downlink:
+            # mirror hop_costs: the dense broadcast gets its own downlink
+            # rows, so the ledger reconciles hop by hop
+            down = DenseMean().leaf_message_bytes(template)
+            out += _hop_leaf_costs("downlink", down, paths, self.network,
+                                   mult=n_clients)
         return out
 
 
@@ -231,6 +257,19 @@ class Hierarchical(Topology):
     the dense-WAN two-level round bit-exact with the flat ``Star`` path
     (the driver's safety-rail contract) instead of merely close to it; the
     per-hop cost model still prices both hops.
+
+    ``streaming=True`` is the streaming∘hierarchical composition: the
+    two-level round runs *per leaf* in reverse-layer order — leaf l's
+    intra-pod reduce feeds its inter-pod reduce immediately, so the WAN
+    hop of early-finishing leaves overlaps the intra-pod reduction of the
+    remaining leaves. Numerics are bit-exact with the blocking
+    ``Hierarchical`` round (every hop folds the same per-leaf rng its
+    tree-level reduce folds), the cost model is inherited unchanged (the
+    ledger stays the serial α–β view), and the modeled overlap win is
+    priced by ``runtime.StreamingSchedule``. At ``n_pods=1`` the spec
+    resolver (``get_topology``) degenerates the round to ``StreamingStar``
+    (flat ``Star`` when blocking) — the single-pod round *is* the flat
+    round, matching the driver contract.
     """
 
     n_pods: int = 2
@@ -238,8 +277,11 @@ class Hierarchical(Topology):
     inter: Reducer = field(default_factory=DenseMean)
     intra_net: NetworkModel = field(default_factory=lambda: link_model("ici"))
     inter_net: NetworkModel = field(default_factory=lambda: link_model("wan"))
+    streaming: bool = False
 
-    name = "hierarchical"
+    @property
+    def name(self) -> str:
+        return "streaming-hier" if self.streaming else "hierarchical"
 
     @property
     def all_dense(self) -> bool:
@@ -276,6 +318,8 @@ class Hierarchical(Topology):
                 "inter": self.inter.init_state(self._pod_means(stacked))}
 
     def reduce(self, stacked, state, rng):
+        if self.streaming:
+            return self._reduce_streaming(stacked, state, rng)
         if self.all_dense:
             # see class docstring: dense∘dense ≡ the flat mean, computed
             # as such so the two-level round is bit-exact with Star
@@ -301,6 +345,57 @@ class Hierarchical(Topology):
         return consensus, {"intra": intra_states,
                            "inter": inter_state}
 
+    def _reduce_streaming(self, stacked, state, rng):
+        """The per-leaf two-level round (``streaming=True`` execution).
+
+        Leaves run in reverse-layer order; for each leaf the intra-pod
+        reduce feeds the inter-pod reduce immediately. Bit-exactness with
+        the blocking ``reduce``: pod p's intra hop folds
+        ``fold_in(fold_in(rng, p), leaf)`` — exactly what
+        ``intra.reduce``'s internal per-leaf loop folds under
+        ``fold_in(rng, p)`` — and the inter hop folds
+        ``fold_in(fold_in(rng, n_pods), leaf)`` likewise. The dense-intra
+        fused-pod-means and dense∘dense flat-mean specializations of the
+        blocking path are preserved per leaf (state passes through
+        untouched where the blocking round leaves it untouched).
+        """
+        leaves, treedef = jax.tree.flatten(stacked)
+        P = self.n_pods
+        if self.all_dense:
+            out = [None] * len(leaves)
+            for i in reversed(range(len(leaves))):
+                out[i] = jnp.mean(leaves[i], axis=0)
+            return treedef.unflatten(out), state
+        dense_intra = type(self.intra) is DenseMean
+        if not dense_intra:
+            intra_states = [self.intra.split_state(state["intra"][p], treedef)
+                            for p in range(P)]
+        inter_states = self.inter.split_state(state["inter"], treedef)
+        out = [None] * len(leaves)
+        for i in reversed(range(len(leaves))):
+            x = leaves[i]
+            m = x.shape[0] // P
+            if dense_intra:
+                pod_means = jnp.mean(
+                    x.reshape((P, m) + x.shape[1:]), axis=1)
+            else:
+                pms = []
+                for p in range(P):
+                    pm, intra_states[p][i] = self.intra.reduce_leaf(
+                        x[p * m:(p + 1) * m], intra_states[p][i],
+                        jax.random.fold_in(jax.random.fold_in(rng, p), i))
+                    pms.append(pm)
+                pod_means = jnp.stack(pms)
+            out[i], inter_states[i] = self.inter.reduce_leaf(
+                pod_means, inter_states[i],
+                jax.random.fold_in(jax.random.fold_in(rng, P), i))
+        new_intra = (state["intra"] if dense_intra else
+                     tuple(self.intra.join_state(intra_states[p], treedef)
+                           for p in range(P)))
+        return treedef.unflatten(out), {
+            "intra": new_intra,
+            "inter": self.inter.join_state(inter_states, treedef)}
+
     def hop_costs(self, template, n_clients: int) -> List[HopCost]:
         if n_clients % self.n_pods:
             # same shape contract as init_state/reduce — pricing must not
@@ -312,7 +407,7 @@ class Hierarchical(Topology):
         inter_msg = self.inter.message_bytes(template)
         intra_total = n_clients * intra_msg
         inter_total = self.n_pods * inter_msg
-        return [
+        hops = [
             # pods reduce in parallel: time sees one pod's traffic
             HopCost(hop="intra_pod", reducer=self.intra.name,
                     network=self.intra_net, bytes=intra_total,
@@ -323,6 +418,14 @@ class Hierarchical(Topology):
                     time_s=self.inter_net.latency_s
                     + inter_total / self.inter_net.bandwidth_Bps),
         ]
+        if self.inter_net.count_downlink:
+            # the global consensus broadcast rides the slow (WAN) link back
+            # to every client — dense and reducer-independent, like Star's
+            down = n_clients * dense_bytes(template)
+            hops.append(HopCost(hop="downlink", reducer="dense",
+                                network=self.inter_net, bytes=down,
+                                time_s=round_time(self.inter_net, down)))
+        return hops
 
     def leaf_costs(self, template, n_clients: int) -> List[LeafCost]:
         """Per-leaf ledger across both hops, mirroring ``hop_costs``:
@@ -332,24 +435,22 @@ class Hierarchical(Topology):
         if n_clients % self.n_pods:
             raise ValueError(
                 f"{n_clients} clients not divisible into {self.n_pods} pods")
+        if not (supports_leaf_bytes(self.intra)
+                and supports_leaf_bytes(self.inter)):
+            return []  # pre-per-leaf-protocol custom reducer: no ledger
         m = n_clients // self.n_pods
         paths = _leaf_paths(template)
-        out = []
-        try:
-            per_hop = [self.intra.leaf_message_bytes(template),
-                       self.inter.leaf_message_bytes(template)]
-        except NotImplementedError:
-            return []  # pre-per-leaf-protocol custom reducer: no ledger
-        for (hop, red, net, mult, tmult), hop_bytes in zip((
-                ("intra_pod", self.intra, self.intra_net, n_clients, m),
-                ("inter_pod", self.inter, self.inter_net, self.n_pods,
-                 self.n_pods)), per_hop):
-            for i, (b, p) in enumerate(zip(hop_bytes, paths)):
-                t = tmult * b / net.bandwidth_Bps
-                if i == 0:
-                    t += net.latency_s
-                out.append(LeafCost(leaf=i, path=p, hop=hop,
-                                    bytes=mult * b, time_s=t))
+        out = _hop_leaf_costs("intra_pod",
+                              self.intra.leaf_message_bytes(template),
+                              paths, self.intra_net,
+                              mult=n_clients, tmult=m)
+        out += _hop_leaf_costs("inter_pod",
+                               self.inter.leaf_message_bytes(template),
+                               paths, self.inter_net, mult=self.n_pods)
+        if self.inter_net.count_downlink:
+            out += _hop_leaf_costs("downlink",
+                                   DenseMean().leaf_message_bytes(template),
+                                   paths, self.inter_net, mult=n_clients)
         return out
 
 
@@ -363,7 +464,13 @@ def get_topology(spec, *, reducer=None, network: Optional[NetworkModel] = None,
     (communication/compute overlap — see ``StreamingStar``);
     "hier"/"hierarchical" composes ``reducer`` intra-pod (dense by default)
     with ``inter_reducer`` (int8 by default) inter-pod over calibrated
-    ICI/WAN links.
+    ICI/WAN links; "streaming-hier"/"hier-streaming" is the same two-level
+    round reduced per leaf (``Hierarchical(streaming=True)``).
+
+    Single-pod degeneracy: a hierarchical spec with ``n_pods=1`` has no
+    inter-pod link, so it resolves to the flat round over ``reducer`` —
+    ``Star`` (blocking) or ``StreamingStar`` (streaming) — matching the
+    driver/``build_sync_step`` contract that one pod *is* the flat star.
     """
     if isinstance(spec, Topology):
         return spec
@@ -372,11 +479,19 @@ def get_topology(spec, *, reducer=None, network: Optional[NetworkModel] = None,
         return Star(reducer=red, network=network or NetworkModel())
     if spec in ("streaming", "streaming-star", "stream"):
         return StreamingStar(reducer=red, network=network or NetworkModel())
-    if spec in ("hier", "hierarchical", "pods"):
+    hier_specs = ("hier", "hierarchical", "pods")
+    stream_hier_specs = ("streaming-hier", "hier-streaming",
+                         "streaming-hierarchical")
+    if spec in hier_specs + stream_hier_specs:
+        streaming = spec in stream_hier_specs
+        if n_pods == 1:
+            cls = StreamingStar if streaming else Star
+            return cls(reducer=red, network=network or NetworkModel())
         inter = get_reducer(inter_reducer if inter_reducer is not None
                             else "int8", quant_bits=quant_bits,
                             topk_frac=topk_frac)
         return Hierarchical(n_pods=n_pods, intra=red, inter=inter,
                             intra_net=link_model("ici"),
-                            inter_net=network or link_model("wan"))
+                            inter_net=network or link_model("wan"),
+                            streaming=streaming)
     raise ValueError(f"unknown topology spec: {spec!r}")

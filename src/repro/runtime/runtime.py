@@ -46,7 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.cost import NetworkModel
-from repro.comm.reducer import StalenessWeightedMean, get_reducer
+from repro.comm.reducer import (DenseMean, StalenessWeightedMean,
+                                get_reducer, supports_leaf_bytes)
 from repro.configs.base import TrainConfig
 from repro.core.simulate import (
     _COMM_SALT,
@@ -58,7 +59,7 @@ from repro.core.simulate import (
 )
 from repro.engine.algorithm import get_algorithm, make_async
 from repro.engine.engine import Engine, StageStatus
-from repro.engine.topology import Star
+from repro.engine.topology import Hierarchical, Star
 from repro.obs.trace import CAT_COMM, CAT_COMPUTE, CAT_CONTROL, CAT_MERGE, VIRTUAL
 from repro.runtime.client import Heterogeneity, sample_clients
 from repro.runtime.clock import Clock, EventQueue, TraceEntry
@@ -135,7 +136,9 @@ class EventBackend(VmapSimulatorBackend):
         self.hetero = (self._hetero_arg if self._hetero_arg is not None
                        else Heterogeneity.from_config(cfg))
         net = NetworkModel(latency_s=cfg.comm_latency_s,
-                           bandwidth_gbps=cfg.comm_bandwidth_gbps)
+                           bandwidth_gbps=cfg.comm_bandwidth_gbps,
+                           count_downlink=getattr(cfg, "count_downlink",
+                                                  False))
         self.clients = sample_clients(self.N, self.hetero, net)
         self.clock = Clock()
         # runtime log records carry the virtual timestamp alongside the
@@ -160,7 +163,11 @@ class EventBackend(VmapSimulatorBackend):
                                                               None)
         self._msg_bytes = first_hop.message_bytes(self.init_params)
         hops = topo.hop_costs(self.init_params, self.N)
-        self._extra_hop_time = sum(h.time_s for h in hops[1:])
+        # hops beyond the uplink add to the barrier serially — except the
+        # downlink, which broadcast_events prices per client after the
+        # merge, and (below) a per-leaf-streamed WAN hop
+        self._extra_hop_time = sum(h.time_s for h in hops[1:]
+                                   if h.hop != "downlink")
 
         # upload schedule: what events one client's round-end message emits.
         # Per-leaf payload bytes come from the uplink reducer; per-leaf
@@ -168,20 +175,46 @@ class EventBackend(VmapSimulatorBackend):
         self.schedule: UploadSchedule = get_schedule(
             self._schedule_arg if self._schedule_arg is not None
             else getattr(cfg, "upload_schedule", None))
-        try:
+        if supports_leaf_bytes(first_hop):
+            # explicit capability probe (not except NotImplementedError):
+            # an exception from an *implemented* per-leaf method must
+            # propagate, never degrade to monolithic blob pricing
             self._leaf_bytes = first_hop.leaf_message_bytes(self.init_params)
             sizes = [l.size for l in jax.tree.leaves(self.init_params)]
-        except NotImplementedError:
-            if self.schedule.name == "streaming":
+        else:
+            if getattr(self.schedule, "streams_uplink", False):
                 raise ValueError(
                     f"reducer {first_hop!r} has no per-leaf payload "
                     "accounting (leaf_message_bytes); streaming uploads "
                     "need it — implement the per-leaf protocol or use the "
-                    "blocking schedule") from None
+                    "blocking schedule")
             # blocking schedules only ever sum the list: one opaque blob
             self._leaf_bytes, sizes = [self._msg_bytes], [1]
         total = float(sum(sizes))
         self._leaf_fracs = [s / total for s in sizes]
+        # the downlink ships the dense consensus whatever the uplink
+        # reducer; per-client pricing happens in schedule.broadcast_events
+        self._down_bytes = DenseMean().leaf_message_bytes(self.init_params)
+        self._ready = [0.0] * self.N   # per-client next-round start times
+        # streaming∘hierarchical: the full streaming schedule forwards each
+        # leaf over the inter-pod WAN link as soon as every pod holds it,
+        # overlapping the WAN hop with the intra-pod reduction of the
+        # remaining leaves (replacing the serial _extra_hop_time barrier add)
+        self._stream_wan = (isinstance(topo, Hierarchical)
+                            and getattr(self.schedule, "streams_round",
+                                        False))
+        if self._stream_wan:
+            if not supports_leaf_bytes(topo.inter):
+                raise ValueError(
+                    f"inter-pod reducer {topo.inter!r} has no per-leaf "
+                    "payload accounting (leaf_message_bytes); streaming "
+                    "the WAN hop needs it — implement the per-leaf "
+                    "protocol or use upload_schedule='streaming-uplink'")
+            self._wan_leaf_bytes = [
+                topo.n_pods * b
+                for b in topo.inter.leaf_message_bytes(self.init_params)]
+            self._wan_net = topo.inter_net
+            self._extra_hop_time = 0.0
         if self.asynchronous and self.schedule.name != "blocking":
             raise ValueError(
                 f"upload_schedule={self.schedule.name!r} prices per-leaf "
@@ -275,6 +308,75 @@ class EventBackend(VmapSimulatorBackend):
     def _vseries(self, name: str, unit: str, help: str):
         return self._series.series(name, clock=VIRTUAL, unit=unit, help=help)
 
+    def _stream_wan_hop(self, leaf_max: List[float], tracer):
+        """Stream the inter-pod WAN hop per leaf (streaming∘hierarchical).
+
+        Leaf l can cross the WAN once every pod holds its reduced value —
+        ``leaf_max[l]``, the latest intra-pod arrival. Leaves forward in
+        server-completion (reverse-leaf) order over one serial WAN stream:
+        α_wan is paid once when the stream opens, then each leaf
+        serializes at β_wan as soon as it is ready and the link is free —
+        so the WAN transfer of late-layer leaves overlaps the intra-pod
+        reduction still in flight for the early layers. Returns
+        ``(leaf_done, merge_t)``: per-leaf global-consensus times and the
+        barrier merge (the last leaf's WAN landing).
+        """
+        net = self._wan_net
+        link_free = None
+        leaf_done = [0.0] * len(self._wan_leaf_bytes)
+        merge_t = 0.0
+        for leaf in range(len(self._wan_leaf_bytes) - 1, -1, -1):
+            ready = leaf_max[leaf]
+            if link_free is None:
+                link_free = ready + net.latency_s  # WAN stream opens once
+            send = max(ready, link_free)
+            ser = self._wan_leaf_bytes[leaf] / net.bandwidth_Bps
+            fin = send + ser
+            link_free = fin
+            leaf_done[leaf] = fin
+            merge_t = max(merge_t, fin)
+            self.trace.append((fin, "wan_leaf", -1, leaf))
+            if tracer:
+                tracer.add("reduce_leaf", fin - ser, fin, cat=CAT_COMM,
+                           track="server/wan", clock=VIRTUAL,
+                           attrs={"leaf": leaf, "hop": "inter_pod",
+                                  "bytes": self._wan_leaf_bytes[leaf]})
+        return leaf_done, merge_t
+
+    def _broadcast_round(self, leaf_done: List[float], tracer) -> None:
+        """Price each client's downlink and stage its next-round start.
+
+        ``schedule.broadcast_events`` turns the server's per-leaf finish
+        times into the client's broadcast arrivals (free on links that
+        don't bill the downlink); the returned ready time is when that
+        client may begin the next round's local compute. The events land
+        in the trace with their (post-merge) timestamps but the clock is
+        not advanced past the merge — the run's wall-clock is when the
+        consensus exists at the server, and the next round's queue drain
+        picks up from each client's ready time.
+        """
+        for c in self.clients:
+            events, ready = self.schedule.broadcast_events(
+                c, leaf_done, self._down_bytes)
+            for t, kind, info in events:
+                self.trace.append((t, kind, c.cid) + info)
+                if not tracer:
+                    continue
+                if kind == "leaf_broadcast":
+                    leaf = info[0]
+                    ser = self._down_bytes[leaf] / c.network.bandwidth_Bps
+                    tracer.add("broadcast_leaf", t - ser, t, cat=CAT_COMM,
+                               track=f"client/{c.cid}", clock=VIRTUAL,
+                               attrs={"leaf": leaf,
+                                      "bytes": self._down_bytes[leaf]})
+                else:  # broadcast_arrival: one monolithic transfer window
+                    total = sum(self._down_bytes)
+                    tracer.add("broadcast",
+                               t - total / c.network.bandwidth_Bps, t,
+                               cat=CAT_COMM, track=f"client/{c.cid}",
+                               clock=VIRTUAL, attrs={"bytes": total})
+            self._ready[c.cid] = ready
+
     def _replay_rounds(self, round_steps: List[int], masks: List[np.ndarray]):
         """Advance the event clock over the executed barrier rounds.
 
@@ -283,7 +385,10 @@ class EventBackend(VmapSimulatorBackend):
         arrivals that start during the final local step (the overlap the
         clock then prices). A dropped client skipped its local compute
         window but still answers the barrier with its zero-delta message,
-        so it schedules upload-only arrivals.
+        so it schedules upload-only arrivals. Client c's round starts at
+        its own broadcast-ready time from the previous round (all equal
+        to the previous merge when the downlink is unbilled); after the
+        merge the downlink is priced per client via ``broadcast_events``.
         """
         tracer = self._tracer
         dropouts = self._metrics.counter(
@@ -295,6 +400,7 @@ class EventBackend(VmapSimulatorBackend):
         s_round = self._vseries(
             "runtime.round_time_s", "s",
             "virtual-clock duration of each barrier round")
+        n_leaves = len(self._leaf_bytes)
         for kk, mask in zip(round_steps, masks):
             start = self.clock.now
             s_active.record(start, float(int(mask.sum())))
@@ -305,22 +411,24 @@ class EventBackend(VmapSimulatorBackend):
                 if tracer else None
             for c in self.clients:
                 active = bool(mask[c.cid])
+                start_c = self._ready[c.cid]
                 if not active:
-                    self.trace.append((start, "dropout", c.cid))
+                    self.trace.append((start_c, "dropout", c.cid))
                     dropouts.inc(mode="sync")
                     if tracer:
-                        tracer.instant("dropout", start, cat=CAT_CONTROL,
+                        tracer.instant("dropout", start_c, cat=CAT_CONTROL,
                                        track=f"client/{c.cid}",
                                        clock=VIRTUAL)
                 events, _ = self.schedule.round_events(
-                    c, start, kk, self._leaf_bytes, self._leaf_fracs,
+                    c, start_c, kk, self._leaf_bytes, self._leaf_fracs,
                     active=active)
                 if tracer:
-                    self._trace_client_round(tracer, c, start, kk, events,
+                    self._trace_client_round(tracer, c, start_c, kk, events,
                                              active)
                 for t, kind, info in events:
                     self.queue.push(t, kind, c.cid, info)
             merge_t = start
+            leaf_max = [start] * n_leaves
             while self.queue:
                 ev = self.queue.pop()
                 self.clock.advance(ev.time)
@@ -328,7 +436,21 @@ class EventBackend(VmapSimulatorBackend):
                 # are (time, kind, client, leaf index)
                 self.trace.append((ev.time, ev.kind, ev.client) + ev.info)
                 merge_t = max(merge_t, ev.time)
-            merge_t += self._extra_hop_time
+                if ev.kind == "leaf_arrival":
+                    leaf = ev.info[0]
+                    leaf_max[leaf] = max(leaf_max[leaf], ev.time)
+            if self._stream_wan:
+                # per-leaf WAN forwarding replaces the serial barrier add
+                leaf_done, merge_t = self._stream_wan_hop(leaf_max, tracer)
+            elif getattr(self.schedule, "streams_round", False):
+                # flat star: the server finishes leaf l at its last arrival
+                merge_t += self._extra_hop_time
+                leaf_done = leaf_max
+            else:
+                # blocking barrier (or uplink-only streaming): the whole
+                # round merges at once, extra hops added serially
+                merge_t += self._extra_hop_time
+                leaf_done = [merge_t] * len(self._down_bytes)
             self.clock.advance(merge_t)
             self.trace.append((merge_t, "merge", -1))
             self._round_times.append(merge_t)
@@ -336,6 +458,8 @@ class EventBackend(VmapSimulatorBackend):
             if tracer:
                 tracer.instant("broadcast", merge_t, cat=CAT_COMM,
                                track="server", clock=VIRTUAL)
+            self._broadcast_round(leaf_done, tracer)
+            if tracer:
                 tracer.end(rid, merge_t)
 
     def _sample_round_masks(self, n: int):
@@ -580,8 +704,9 @@ class RuntimeResult:
     comm_bytes: int                    # engine ledger (modeled payload bytes)
     comm_time_s: float                 # engine ledger (serial α–β link time)
     timeline: List[Tuple[float, int, float]]  # (time_s, round, objective)
-    # full event log; streaming "leaf_arrival" entries carry the leaf
-    # index as a fourth element (see clock.TraceEntry)
+    # full event log; per-leaf entries ("leaf_arrival", "leaf_broadcast",
+    # "wan_leaf") carry the leaf index as a fourth element (see
+    # clock.TraceEntry)
     trace: List[TraceEntry]
     params: Any = None                 # final consensus / server model
     # per-(leaf, hop) comm totals for the whole run (engine.leaf_ledger():
@@ -623,6 +748,11 @@ def run(loss_fn, init_params, client_data, cfg: TrainConfig, eval_fn, *,
             raise ValueError(
                 "asynchronous merging is a flat star protocol; "
                 f"topology={cfg.topology!r} only composes with barrier rounds")
+        if getattr(cfg, "count_downlink", False):
+            raise ValueError(
+                "count_downlink prices the per-round consensus broadcast; "
+                "asynchronous merging has no broadcast (clients pull on "
+                "dispatch) — it composes with barrier rounds only")
         merge_red = staleness_reducer_for(cfg, reducer)
         net = NetworkModel(latency_s=cfg.comm_latency_s,
                            bandwidth_gbps=cfg.comm_bandwidth_gbps)

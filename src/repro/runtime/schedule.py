@@ -19,6 +19,15 @@ client events. The *upload schedule* decides what those events are:
                       each leaf serializes at β as soon as it is released
                       and the link is free.
 
+Both schedules also price the *downlink* (``broadcast_events``) when the
+client link bills it (``NetworkModel.count_downlink``): blocking ships the
+consensus as one monolithic broadcast after the whole round has merged;
+streaming ships leaf l's broadcast as soon as the server finishes reducing
+leaf l — high-index leaves (reduced first under the reverse-order uplink)
+serialize down while the server is still merging the early layers, so the
+next round starts ``≈ α + first_leaf_bytes/β`` after the final merge
+instead of a full model transfer later.
+
 Numerics are untouched either way — the schedule is pure clock accounting
 on top of the bit-exact synchronous replay, which is exactly why streaming
 and blocking runs of the same config produce identical parameters while
@@ -53,11 +62,34 @@ class UploadSchedule:
     """
 
     name = "base"
+    # capability flags the event runtime branches on: does the schedule
+    # stream the uplink per leaf, and does it stream the *whole* round
+    # (per-leaf WAN hop + per-leaf downlink) rather than the uplink only?
+    streams_uplink = False
+    streams_round = False
 
     def round_events(self, client: ClientProcess, start: float, k_steps: int,
                      leaf_bytes: Sequence[int], leaf_fracs: Sequence[float],
                      active: bool = True
                      ) -> Tuple[List[ScheduledEvent], float]:
+        raise NotImplementedError
+
+    def broadcast_events(self, client: ClientProcess,
+                         leaf_done: Sequence[float],
+                         leaf_bytes: Sequence[int]
+                         ) -> Tuple[List[ScheduledEvent], float]:
+        """Price the server→client downlink of one round.
+
+        ``leaf_done[l]`` is the modeled time the server finished reducing
+        leaf l (all equal to the merge instant under a blocking barrier);
+        ``leaf_bytes[l]`` is leaf l's *dense* broadcast payload (the
+        downlink ships the uncompressed consensus — cost_model.md).
+        Returns ``(events, ready_s)``: ``ready_s`` is when the client
+        holds the full consensus and can begin the next round's local
+        compute. On links that don't bill the downlink
+        (``count_downlink=False``) this is free: no events, ready at the
+        final merge.
+        """
         raise NotImplementedError
 
 
@@ -79,6 +111,15 @@ class BlockingSchedule(UploadSchedule):
         t = done + client.upload_time(total)
         return [(done, "compute_done", ()), (t, "arrival", ())], t
 
+    def broadcast_events(self, client, leaf_done, leaf_bytes):
+        net = client.network
+        merged = max(leaf_done)
+        if not net.count_downlink:
+            return [], merged
+        # one monolithic broadcast after the whole round has merged
+        t = merged + net.latency_s + sum(leaf_bytes) / net.bandwidth_Bps
+        return [(t, "broadcast_arrival", ())], t
+
 
 @dataclass(frozen=True)
 class StreamingSchedule(UploadSchedule):
@@ -94,9 +135,26 @@ class StreamingSchedule(UploadSchedule):
     per leaf (info = (leaf index,)) plus the usual ``compute_done``;
     the client's finish is the last leaf's arrival, which is what lets a
     multi-leaf model hide most of its upload behind its own compute.
+
+    By default the *whole round* streams: the downlink broadcast (and,
+    under a hierarchical topology, the inter-pod WAN hop — see
+    ``EventBackend``) also run per leaf in server-completion order.
+    ``uplink_only=True`` restores the PR-4 comparator semantics — per-leaf
+    uplink, but a blocking WAN hop and monolithic broadcast — which is the
+    baseline the streaming∘hierarchical benchmark rows beat.
     """
 
-    name = "streaming"
+    uplink_only: bool = False
+
+    streams_uplink = True
+
+    @property
+    def name(self):
+        return "streaming-uplink" if self.uplink_only else "streaming"
+
+    @property
+    def streams_round(self):
+        return not self.uplink_only
 
     def round_events(self, client, start, k_steps, leaf_bytes, leaf_fracs,
                      active=True):
@@ -129,11 +187,42 @@ class StreamingSchedule(UploadSchedule):
             events.append((finish, "leaf_arrival", (leaf,)))
         return events, finish
 
+    def broadcast_events(self, client, leaf_done, leaf_bytes):
+        net = client.network
+        merged = max(leaf_done)
+        if not net.count_downlink:
+            return [], merged
+        if self.uplink_only:
+            # PR-4 comparator: monolithic broadcast after the merge
+            t = merged + net.latency_s + sum(leaf_bytes) / net.bandwidth_Bps
+            return [(t, "broadcast_arrival", ())], t
+        # streamed downlink: leaf l ships as soon as the server finishes
+        # reducing it. Completion order is reverse-leaf order (the uplink
+        # streams leaves back-to-front), so high-index leaves serialize
+        # down while the early layers are still merging and the round's
+        # last landing — leaf 0, the first the next forward pass needs —
+        # trails the final merge by only α (amortized) + its own
+        # serialization instead of the full model's.
+        events: List[ScheduledEvent] = []
+        link_free = None
+        fin = merged
+        for leaf in range(len(leaf_bytes) - 1, -1, -1):
+            ready = leaf_done[leaf]
+            if link_free is None:
+                link_free = ready + net.latency_s  # stream opens once
+            send = max(ready, link_free)
+            fin = send + leaf_bytes[leaf] / net.bandwidth_Bps
+            link_free = fin
+            events.append((fin, "leaf_broadcast", (leaf,)))
+        return events, fin
+
 
 def get_schedule(spec) -> UploadSchedule:
     """Resolve an upload schedule from a config string (or pass through).
 
-    Accepted specs: "blocking" (default) | "streaming" / "stream".
+    Accepted specs: "blocking" (default) | "streaming" / "stream" |
+    "streaming-uplink" (per-leaf uplink only: blocking WAN hop + monolithic
+    broadcast — the PR-4 comparator).
     """
     if isinstance(spec, UploadSchedule):
         return spec
@@ -141,4 +230,6 @@ def get_schedule(spec) -> UploadSchedule:
         return BlockingSchedule()
     if spec in ("streaming", "stream"):
         return StreamingSchedule()
+    if spec in ("streaming-uplink", "stream-uplink", "uplink"):
+        return StreamingSchedule(uplink_only=True)
     raise ValueError(f"unknown upload schedule spec: {spec!r}")

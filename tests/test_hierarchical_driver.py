@@ -259,9 +259,37 @@ def test_single_pod_config_runs_flat():
     assert {l["hop"] for l in ds.leaf_ledger} == {"uplink"}
 
 
-def test_build_sync_step_rejects_streaming_hierarchical():
-    with pytest.raises(ValueError, match="inter-pod hop|Streaming"):
-        LS.build_sync_step(None, streaming=True, hierarchical=True)
+def test_streaming_hierarchical_driver_composes():
+    """streaming=True now composes with hierarchical=True: the driver runs
+    the per-leaf two-level round, bit-exact with the blocking one, under
+    the streaming-hier topology spec, pricing both hops."""
+    sync_b = LS.build_sync_step("int8", hierarchical=True,
+                                n_pods=N_PODS, inter_reducer="int8")
+    sync_s = LS.build_sync_step("int8", streaming=True,
+                                hierarchical=True, n_pods=N_PODS,
+                                inter_reducer="int8")
+    assert sync_s.streaming and sync_s.hierarchical
+    cfg = dict(algo="local", T1=4, k1=2.0, n_stages=1, reducer="int8")
+    drv_b = StagewiseDriver(TrainConfig(**cfg, topology="hier",
+                                        n_pods=N_PODS), _toy_train_step,
+                            sync_b)
+    drv_s = StagewiseDriver(TrainConfig(**cfg, topology="streaming-hier",
+                                        n_pods=N_PODS), _toy_train_step,
+                            sync_s)
+    assert drv_s.streaming and drv_s.hierarchical
+    assert drv_s.build_topology().name == "streaming-hier"
+    ds_b = drv_b.run(_state(), iter([None] * 32))
+    ds_s = drv_s.run(_state(), iter([None] * 32))
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: bool((a == b).all()),
+        ds_b.state["params"], ds_s.state["params"]))
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: bool((a == b).all()),
+        ds_b.state["comm"], ds_s.state["comm"]))
+    # the streaming ledger prices the identical two-level round
+    assert ds_s.comm_bytes_total == ds_b.comm_bytes_total
+    assert {l["hop"] for l in ds_s.leaf_ledger} == {"intra_pod", "inter_pod"}
+    assert sum(l["bytes"] for l in ds_s.leaf_ledger) == ds_s.comm_bytes_total
 
 
 def test_build_train_steps_two_level_needs_pod_axis():

@@ -10,9 +10,12 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
+from repro.comm import NetworkModel, get_reducer
 from repro.core import schedules as S
 from repro.data.partition import partition_iid, partition_paper
+from repro.engine import get_topology
 from repro.models.attention import _cache_positions
+from repro.runtime import BlockingSchedule, ClientProcess, StreamingSchedule
 from repro.utils.tree import (
     tree_broadcast_leading,
     tree_mean_leading,
@@ -95,3 +98,133 @@ def test_comm_rounds_additive(T1, k1, n_stages):
     stages = S.make_stages("local", 0.1, T1 * 10, float(k1), n_stages, True)
     r = S.comm_rounds(stages)
     assert r == sum(math.ceil(s.T / s.k) for s in stages)
+
+
+# ---------------------------------------------------------------------------
+# Comm ledger partition laws: the per-(leaf, hop) view is an exact
+# partition of the monolithic round — arbitrary leaf trees, reducers,
+# topologies, with and without downlink billing
+# ---------------------------------------------------------------------------
+
+_leaf_sizes = st.lists(st.integers(1, 300), min_size=1, max_size=6)
+
+
+def _template(sizes):
+    return {f"l{i}": jnp.zeros((s,), jnp.float32)
+            for i, s in enumerate(sizes)}
+
+
+@given(_leaf_sizes, st.sampled_from(["dense", "int8", "int4", "topk"]))
+def test_leaf_message_bytes_partition_message_bytes(sizes, spec):
+    red = get_reducer(spec)
+    tmpl = _template(sizes)
+    lb = red.leaf_message_bytes(tmpl)
+    assert len(lb) == len(sizes)
+    assert all(b > 0 for b in lb)
+    assert sum(lb) == red.message_bytes(tmpl)
+
+
+@given(_leaf_sizes, st.sampled_from(["dense", "int8", "topk"]),
+       st.sampled_from(["star", "streaming", "hier", "streaming-hier"]),
+       st.sampled_from([2, 4, 8]), st.booleans())
+def test_leaf_costs_partition_round_totals(sizes, spec, topo_spec, n,
+                                           downlink):
+    """Summing the per-(leaf, hop) ledger rows reproduces the tree-level
+    round price exactly — bytes bit-exactly, modeled seconds to float-sum
+    precision — for every topology × reducer × downlink-billing cell."""
+    net = NetworkModel(latency_s=1e-4, bandwidth_gbps=1.0,
+                       count_downlink=downlink)
+    topo = get_topology(topo_spec, reducer=spec, network=net, n_pods=2,
+                        inter_reducer=spec)
+    tmpl = _template(sizes)
+    lc = topo.leaf_costs(tmpl, n)
+    hops = {h.hop for h in topo.hop_costs(tmpl, n)}
+    assert {l.hop for l in lc} == hops
+    assert ("downlink" in hops) == downlink
+    # per-hop: leaf rows partition the hop's bytes exactly
+    for h in topo.hop_costs(tmpl, n):
+        rows = [l for l in lc if l.hop == h.hop]
+        assert len(rows) == len(sizes)
+        assert sorted(l.leaf for l in rows) == list(range(len(sizes)))
+        assert sum(l.bytes for l in rows) == h.bytes
+        assert math.fsum(l.time_s for l in rows) \
+            == pytest.approx(h.time_s, rel=1e-12)
+    # whole round: uplink + downlink rows sum to the monolithic price
+    assert sum(l.bytes for l in lc) == topo.round_bytes(tmpl, n)
+    assert math.fsum(l.time_s for l in lc) \
+        == pytest.approx(topo.round_time(tmpl, n), rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Schedule tiling laws: per-leaf serialization windows are disjoint, sum
+# to Σ bytes/β, and end at the schedule's finish — uplink and downlink
+# ---------------------------------------------------------------------------
+
+def _client_for(alpha, gbps, step_s=1e-3, downlink=True):
+    return ClientProcess(cid=0, rate=1.0, step_time_s=step_s,
+                         network=NetworkModel(latency_s=alpha,
+                                              bandwidth_gbps=gbps,
+                                              count_downlink=downlink))
+
+
+def _assert_tiling(events, kind, leaf_bytes, Bps, finish, not_before):
+    """Each per-leaf event closes a [fin − bytes/β, fin] serialization
+    window; windows must be disjoint on the one serial link, start no
+    earlier than the stream open, and the last must end at the finish."""
+    wins = [(t - leaf_bytes[info[0]] / Bps, t)
+            for t, k, info in events if k == kind]
+    assert len(wins) == len(leaf_bytes)
+    for (s0, e0), (s1, e1) in zip(wins, wins[1:]):
+        assert s1 >= e0 - 1e-9 * max(1.0, abs(e0))  # no overlap
+    assert wins[0][0] >= not_before - 1e-12
+    assert wins[-1][1] == finish
+    busy = math.fsum(e - s for s, e in wins)
+    assert busy == pytest.approx(sum(leaf_bytes) / Bps, rel=1e-9)
+
+
+@given(st.lists(st.integers(1, 10 ** 6), min_size=1, max_size=8),
+       st.integers(1, 8), st.floats(1e-6, 1e-2), st.floats(0.05, 10.0),
+       st.floats(0.0, 5.0))
+def test_streaming_uplink_windows_tile_the_round(leaf_bytes, k, alpha, gbps,
+                                                 start):
+    c = _client_for(alpha, gbps)
+    fracs = [b / sum(leaf_bytes) for b in leaf_bytes]
+    evs, fin = StreamingSchedule().round_events(c, start, k, leaf_bytes,
+                                                fracs)
+    _assert_tiling(evs, "leaf_arrival", leaf_bytes, c.network.bandwidth_Bps,
+                   fin, start + alpha)
+    # streaming never loses to the blocking monolith on the same round
+    _, fin_blk = BlockingSchedule().round_events(c, start, k, leaf_bytes,
+                                                 fracs)
+    assert fin <= fin_blk + 1e-9 * max(1.0, fin_blk)
+
+
+@given(st.lists(st.integers(1, 10 ** 6), min_size=1, max_size=8),
+       st.data(), st.floats(1e-6, 1e-2), st.floats(0.05, 10.0))
+def test_streaming_downlink_windows_tile_the_broadcast(leaf_bytes, data,
+                                                       alpha, gbps):
+    leaf_done = [data.draw(st.floats(0.0, 2.0)) for _ in leaf_bytes]
+    c = _client_for(alpha, gbps)
+    evs, ready = StreamingSchedule().broadcast_events(c, leaf_done,
+                                                      leaf_bytes)
+    _assert_tiling(evs, "leaf_broadcast", leaf_bytes,
+                   c.network.bandwidth_Bps, ready,
+                   min(leaf_done) + alpha)
+    # every leaf ships only after the server finished reducing it (the
+    # stream opens — and pays α — once, at the first broadcast)
+    for i, (t, _, (leaf,)) in enumerate(evs):
+        lat = alpha if i == 0 else 0.0
+        assert t >= leaf_done[leaf] + lat \
+            + leaf_bytes[leaf] / c.network.bandwidth_Bps - 1e-12
+    # the streamed downlink never loses to the blocking monolith, which
+    # itself never beats the merge instant
+    _, ready_blk = BlockingSchedule().broadcast_events(c, leaf_done,
+                                                       leaf_bytes)
+    assert ready <= ready_blk + 1e-9 * max(1.0, ready_blk)
+    assert ready >= max(leaf_done)
+    # unbilled downlink: both schedules are free and instant
+    c_free = _client_for(alpha, gbps, downlink=False)
+    assert StreamingSchedule().broadcast_events(
+        c_free, leaf_done, leaf_bytes) == ([], max(leaf_done))
+    assert BlockingSchedule().broadcast_events(
+        c_free, leaf_done, leaf_bytes) == ([], max(leaf_done))

@@ -408,9 +408,11 @@ def test_driver_accepts_streaming_topology_and_carries_leaf_ledger():
     drv2 = StagewiseDriver(TrainConfig(algo="local", T1=4, k1=2.0,
                                        n_stages=1), train_step, sync_step)
     assert drv2.streaming
-    # hierarchical configs run two-level rounds now (PR 5) — but not with
-    # a streaming sync step: composing the per-leaf round with the
-    # inter-pod hop is still an open ROADMAP item
-    with pytest.raises(ValueError, match="inter-pod hop"):
+    # a hierarchical config still refuses a *flat* sync step (streaming or
+    # not): the ledger would price an inter-pod hop the round never crosses
+    with pytest.raises(ValueError, match="build_sync_step"):
         StagewiseDriver(TrainConfig(algo="local", topology="hier"),
+                        train_step, sync_step)
+    with pytest.raises(ValueError, match="build_sync_step"):
+        StagewiseDriver(TrainConfig(algo="local", topology="streaming-hier"),
                         train_step, sync_step)
